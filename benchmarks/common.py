@@ -1,0 +1,137 @@
+"""Shared experiment substrate for the paper-figure benchmarks.
+
+Builds (once, cached under experiments/data/) the container-scale analog of
+the paper's study:
+  * RT + PCHIP mini ensembles from the spectral solver,
+  * 5 raw-data surrogate models (different seeds) -- the variability band,
+  * lossy models trained on ZFP-compressed data at Algorithm-1-derived
+    tolerance multiples (x0.5, x1, x2 benign; x16 over-compressed),
+  * a generation-loss model trained on the raw model's own outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import CompressedArrayStore, find_tolerance
+from repro.models.surrogate import (FieldNormalizer, SurrogateConfig,
+                                    make_conditions)
+from repro.sim import RT_SPEC, PCHIP_SPEC, generate_ensemble
+from repro.train.loop import TrainConfig, predict_fields, train_surrogate
+
+DATA_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "data")
+
+RT_MINI = dataclasses.replace(RT_SPEC, ny=48, nx=16, nsteps=500)
+PCHIP_MINI = dataclasses.replace(PCHIP_SPEC, ny=32, nx=32, nsteps=400)
+
+N_SIMS = 16
+N_TEST_SIMS = 4
+N_SEEDS = 5
+LOSSY_MULTIPLES = (0.5, 1.0, 2.0, 16.0)
+MODEL_CFG = SurrogateConfig(height=48, width=16, base_channels=16)
+TRAIN_CFG = TrainConfig(epochs=6, batch_size=32, lr=1e-3)
+
+
+def _train_on(cfg, tc, cond, targets_fn, n, seed):
+    tc = dataclasses.replace(tc, seed=seed)
+    params, _ = train_surrogate(cfg, tc, cond, targets_fn, n)
+    return params
+
+
+def build_study(force: bool = False) -> dict:
+    os.makedirs(DATA_DIR, exist_ok=True)
+    cache = os.path.join(DATA_DIR, "study.npz")
+    meta_p = os.path.join(DATA_DIR, "study.json")
+    if os.path.exists(cache) and os.path.exists(meta_p) and not force:
+        z = np.load(cache, allow_pickle=True)
+        with open(meta_p) as f:
+            meta = json.load(f)
+        return {"meta": meta, **{k: z[k] for k in z.files}}
+
+    t_start = time.time()
+    pvec, fields = generate_ensemble(RT_MINI, N_SIMS, seed=0)
+    nsnaps = fields.shape[1]
+    norm = FieldNormalizer.fit(fields)
+    flat = fields.reshape(-1, *fields.shape[2:])
+    nf = np.asarray(norm.normalize(jnp.asarray(flat)))
+    cond = make_conditions(pvec, nsnaps)
+    n_train = (N_SIMS - N_TEST_SIMS) * nsnaps
+    train_nf, test_nf = nf[:n_train], nf[n_train:]
+    train_cond, test_cond = cond[:n_train], cond[n_train:]
+
+    # --- 5 raw-data models (training-variability band) --------------------
+    raw_preds = []
+    for s in range(N_SEEDS):
+        p = _train_on(MODEL_CFG, TRAIN_CFG, train_cond,
+                      lambda i: jnp.asarray(train_nf[i]), n_train, seed=s)
+        raw_preds.append(predict_fields(p, MODEL_CFG, test_cond))
+    raw_preds = np.stack(raw_preds)                       # (S, Ntest, H, W, 6)
+
+    # --- Algorithm 1 tolerance from model error ---------------------------
+    e_model = float(np.mean(np.abs(raw_preds[0] - test_nf)))
+    sample = np.transpose(train_nf[nsnaps // 2], (2, 0, 1))
+    tol_res = find_tolerance(sample, e_model)
+
+    # --- lossy models at tolerance multiples -------------------------------
+    lossy_preds, lossy_ratios, lossy_tols = [], [], []
+    for mult in LOSSY_MULTIPLES:
+        tol = tol_res.tolerance * mult
+        samples = [np.transpose(x, (2, 0, 1)) for x in train_nf]
+        store = CompressedArrayStore(samples, tolerances=[tol] * n_train)
+        get = lambda i: jnp.transpose(store.get_batch(i), (0, 2, 3, 1))
+        p = _train_on(MODEL_CFG, TRAIN_CFG, train_cond, get, n_train, seed=100)
+        lossy_preds.append(predict_fields(p, MODEL_CFG, test_cond))
+        lossy_ratios.append(float(store.ratio))
+        lossy_tols.append(tol)
+    lossy_preds = np.stack(lossy_preds)
+
+    # --- generation-loss model (paper Fig. 5) ------------------------------
+    teacher = _train_on(MODEL_CFG, TRAIN_CFG, train_cond,
+                        lambda i: jnp.asarray(train_nf[i]), n_train, seed=0)
+    teacher_out = predict_fields(teacher, MODEL_CFG, train_cond)
+    student = _train_on(MODEL_CFG, TRAIN_CFG, train_cond,
+                        lambda i: jnp.asarray(teacher_out[i]), n_train,
+                        seed=200)
+    student_preds = predict_fields(student, MODEL_CFG, test_cond)
+
+    meta = {
+        "build_seconds": round(time.time() - t_start, 1),
+        "n_sims": N_SIMS, "n_test_sims": N_TEST_SIMS, "n_seeds": N_SEEDS,
+        "nsnaps": int(nsnaps),
+        "model_l1_error": e_model,
+        "alg1_tolerance": tol_res.tolerance,
+        "alg1_ratio": tol_res.ratio,
+        "alg1_iterations": tol_res.iterations,
+        "lossy_multiples": list(LOSSY_MULTIPLES),
+        "lossy_ratios": lossy_ratios,
+        "lossy_tolerances": lossy_tols,
+        "norm_mean": np.asarray(norm.mean).tolist(),
+        "norm_std": np.asarray(norm.std).tolist(),
+        "rho_bounds": [1.0, None],
+    }
+    arrays = dict(raw_preds=raw_preds, lossy_preds=lossy_preds,
+                  student_preds=student_preds, test_nf=test_nf,
+                  test_cond=test_cond, test_pvec=pvec[N_SIMS - N_TEST_SIMS:])
+    np.savez_compressed(cache, **arrays)
+    with open(meta_p, "w") as f:
+        json.dump(meta, f, indent=1)
+    return {"meta": meta, **arrays}
+
+
+def denormalize(study, x):
+    m = np.asarray(study["meta"]["norm_mean"], np.float32)
+    s = np.asarray(study["meta"]["norm_std"], np.float32)
+    return x * s + m
+
+
+def per_sim_series(study, arr):
+    """(N_test*T, H, W, 6) -> (n_test_sims, T, H, W, 6) raw units."""
+    t = study["meta"]["nsnaps"]
+    n = study["meta"]["n_test_sims"]
+    return denormalize(study, arr).reshape(n, t, *arr.shape[1:])

@@ -1,0 +1,58 @@
+"""Paper Fig. 12: per-epoch training time, raw vs compressed, vs worker count.
+
+Measures one real epoch (data + train step) on this container for raw and
+compressed stores under each emulated file system, then projects 24/48/72-
+worker scaling the way the paper's Fig. 12 exhibits it: compute time divides
+by workers, I/O bandwidth is the shared-file-system constant (documented
+analytic projection; the single-node measurement is the anchor).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import MODEL_CFG, TRAIN_CFG, build_study
+from benchmarks.loading_throughput import FILE_SYSTEMS
+from repro.core import CompressedArrayStore, RawArrayStore
+from repro.models.surrogate import make_conditions
+from repro.train.loop import TrainConfig, train_surrogate
+
+WORKERS = (24, 48, 72)
+
+
+def run(tmp_root: str = "/tmp/repro_epoch_bench"):
+    study = build_study()
+    test = study["test_nf"]
+    samples = [np.transpose(test[i % len(test)], (2, 0, 1)) for i in range(96)]
+    tol = study["meta"]["alg1_tolerance"]
+    cond = np.random.default_rng(0).standard_normal(
+        (len(samples), MODEL_CFG.cond_dim)).astype(np.float32)
+
+    rows = []
+    for fs, bw in FILE_SYSTEMS.items():
+        for name, store in (
+                ("raw", RawArrayStore(samples, root=f"{tmp_root}/{fs}/raw",
+                                      bandwidth_mbs=bw)),
+                ("zfp", CompressedArrayStore(samples,
+                                             tolerances=[tol] * len(samples),
+                                             root=f"{tmp_root}/{fs}/zfp",
+                                             bandwidth_mbs=bw))):
+            tc = TrainConfig(epochs=1, batch_size=16, lr=1e-3)
+            get = lambda i: jnp.transpose(store.get_batch(i), (0, 2, 3, 1))
+            t0 = time.time()
+            train_surrogate(MODEL_CFG, tc, cond, get, len(samples))
+            epoch_s = time.time() - t0
+            io_s = store.stats.read_seconds + store.stats.decode_seconds
+            compute_s = max(epoch_s - io_s, 1e-6)
+            proj = {w: max(compute_s / w * 24, 0) + io_s for w in WORKERS}
+            rows.append((f"epoch_time/{fs}/{name}", epoch_s * 1e6,
+                         f"measured={epoch_s:.2f}s io={io_s:.2f}s "
+                         + " ".join(f"proj{w}={proj[w]:.2f}s" for w in WORKERS)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

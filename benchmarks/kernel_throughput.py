@@ -1,0 +1,46 @@
+"""Decode-kernel throughput (compiled oracle path on CPU; Pallas on TPU) and
+codec rate table -- the substrate for the paper's decompression-overhead
+discussion (§VI / Discussion)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.compression import transform as T
+from repro.kernels import ops
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((512, 512)).astype(np.float32)
+    xb = T.blockify(T.pad_to_blocks(jnp.asarray(x)))
+    rows = []
+    for bits in (4, 8, 16):
+        payload, emax = ops.zfp_encode_blocks(xb, bits)
+        out = ops.zfp_decode_blocks_fast(payload, emax, bits)   # compile
+        out.block_until_ready()
+        n = 20
+        t0 = time.time()
+        for _ in range(n):
+            ops.zfp_decode_blocks_fast(payload, emax, bits).block_until_ready()
+        dt = (time.time() - t0) / n
+        raw_mb = x.nbytes / 1e6
+        rows.append((f"kernel/zfp_decode_b{bits}", dt * 1e6,
+                     f"raw_equiv_MBps={raw_mb / dt:.0f} "
+                     f"compressed_ratio={32 / bits:.1f}x"))
+    # flash attention kernel one timing point (interpret mode: correctness
+    # path only -- wall time not meaningful on CPU, recorded for completeness)
+    q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)).astype(np.float32))
+    t0 = time.time()
+    ops.flash_attention(q, k, k).block_until_ready()
+    rows.append(("kernel/flash_attention_interpret", (time.time() - t0) * 1e6,
+                 "correctness-path (CPU interpret); perf target is TPU"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

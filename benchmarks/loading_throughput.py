@@ -1,0 +1,55 @@
+"""Paper Fig. 11: per-batch data-loading throughput, raw vs ZFP-compressed,
+across three emulated file systems.
+
+The paper's Lassen file systems are emulated by bandwidth throttles matched
+to its reported raw-data baselines (workspace 146 MB/s, VAST 227 MB/s,
+GPFS 747 MB/s per-batch).  Decode runs on-device (compiled path).  Reported
+throughput is RAW-EQUIVALENT bytes delivered per second (the paper's metric:
+how fast training data becomes available).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import build_study
+from repro.core import CompressedArrayStore, RawArrayStore
+
+FILE_SYSTEMS = {"fs1_workspace": 145.65, "fs2_vast": 227.31, "fs3_gpfs": 746.7}
+BATCH = 32
+N_BATCHES = 8
+
+
+def run(tmp_root: str = "/tmp/repro_io_bench"):
+    study = build_study()
+    test = study["test_nf"]
+    samples = [np.transpose(test[i % len(test)], (2, 0, 1))
+               for i in range(128)]
+    tol = study["meta"]["alg1_tolerance"]
+    rows = []
+    rng = np.random.default_rng(0)
+    for fs, bw in FILE_SYSTEMS.items():
+        raw = RawArrayStore(samples, root=f"{tmp_root}/{fs}/raw",
+                            bandwidth_mbs=bw)
+        comp = CompressedArrayStore(samples, tolerances=[tol] * len(samples),
+                                    root=f"{tmp_root}/{fs}/zfp",
+                                    bandwidth_mbs=bw)
+        for name, store in (("raw", raw), ("zfp", comp)):
+            store.get_batch(np.arange(BATCH))          # warm (jit) once
+            store.stats.__init__()
+            t0 = time.time()
+            for _ in range(N_BATCHES):
+                store.get_batch(rng.integers(0, len(samples), BATCH))
+            wall = time.time() - t0
+            raw_equiv = BATCH * N_BATCHES * samples[0].nbytes / 1e6
+            rows.append((f"loading/{fs}/{name}",
+                         wall * 1e6 / N_BATCHES,
+                         f"raw_equiv_MBps={raw_equiv / wall:.1f}"
+                         + (f" ratio={comp.ratio:.1f}x" if name == "zfp" else "")))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,71 @@
+"""Roofline table builder: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) and emits the per-(arch x shape x mesh) three-term table
+used in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_results():
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run():
+    rows = []
+    for r in load_results():
+        if r.get("skipped"):
+            continue
+        t = r["terms"]
+        dom = max(t, key=t.get)
+        frac = r["model_flops"] / max(
+            r["flops_per_device"] * r["n_chips"], 1) if r.get("model_flops") else 0
+        # roofline fraction: ideal model-compute time / achieved-bound time
+        ideal = r["model_flops"] / (r["n_chips"] * 197e12) if r.get("model_flops") else 0
+        bound = max(t.values())
+        rows.append((f"roofline/{r['arch']}/{r['cell']}/{r['mesh']}",
+                     bound * 1e6,
+                     f"compute={t['compute_s']:.4f}s memory={t['memory_s']:.4f}s "
+                     f"collective={t['collective_s']:.4f}s dom={dom[:-2]} "
+                     f"useful_flops={frac:.2f} roofline_frac={ideal / bound if bound else 0:.3f}"))
+    return rows
+
+
+def markdown_table() -> str:
+    lines = ["| arch | cell | mesh | compute_s | memory_s | collective_s | "
+             "bottleneck | MODEL/HLO flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    # recorded SKIP cells (inapplicable shapes; reasons from cell_applicable)
+    from repro.configs import ALL_ARCHS, SHAPE_CELLS, cell_applicable, get_config
+    for arch in ALL_ARCHS:
+        for cell in SHAPE_CELLS:
+            ok, reason = cell_applicable(get_config(arch), cell)
+            if not ok:
+                lines.append(f"| {arch} | {cell.name} | both | SKIP | | | "
+                             f"{reason[:58]} | | |")
+    for r in load_results():
+        if r.get("skipped"):
+            continue
+        t = r["terms"]
+        dom = max(t, key=t.get)
+        ideal = r["model_flops"] / (r["n_chips"] * 197e12)
+        bound = max(t.values())
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {dom[:-2]} "
+            f"| {r['useful_flops_ratio']:.2f} | {ideal / bound:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

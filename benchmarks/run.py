@@ -1,0 +1,47 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  The shared study (ensembles + seed
+models + lossy models) builds once and is cached under experiments/data/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.data_description",     # Table I
+    "benchmarks.variability_bands",    # Fig. 3 / Fig. 6
+    "benchmarks.generation_loss",      # Fig. 5
+    "benchmarks.tolerance_search",     # Algorithm 1
+    "benchmarks.psnr_distributions",   # Fig. 7 / Fig. 9
+    "benchmarks.mixing_layer",         # Fig. 8
+    "benchmarks.loading_throughput",   # Fig. 11
+    "benchmarks.epoch_time",           # Fig. 12
+    "benchmarks.kernel_throughput",    # decompression-overhead substrate
+    "benchmarks.roofline",             # §Roofline table (dry-run artifacts)
+]
+
+
+def main() -> None:
+    import importlib
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            failures += 1
+            print(f"{mod_name},0,FAILED")
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {mod_name} took {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

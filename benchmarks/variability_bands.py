@@ -1,0 +1,51 @@
+"""Paper Fig. 3 / Fig. 6: physical-metric variability bands vs lossy models.
+
+For each lossy model (trained on compressed data at a tolerance multiple),
+check whether its total-mass / momentum / y-momentum trajectories stay
+inside the +/-2 sigma band of the seed-ensemble of raw-data models.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import build_study, per_sim_series
+from repro.core import band_contains, compute_band
+from repro.metrics import total_mass, total_momentum
+
+
+def run():
+    study = build_study()
+    t0 = time.time()
+    raw = [per_sim_series(study, p) for p in study["raw_preds"]]
+    rows = []
+    for metric_name, fn in (("mass", lambda f: total_mass(jnp.asarray(f))),
+                            ("mom_x", lambda f: total_momentum(jnp.asarray(f))[..., 0]),
+                            ("mom_y", lambda f: total_momentum(jnp.asarray(f))[..., 1])):
+        raw_tr = [np.asarray(fn(r)).reshape(-1) for r in raw]    # sims*T flat
+        band = compute_band(raw_tr)
+        # small-ensemble criterion: a 5-seed band can be degenerately narrow,
+        # so ALSO compare the lossy model's deviation from the seed mean
+        # against the worst seed's own deviation (<= 1.5x = within training
+        # randomness; the paper's 30-model +/-2sigma band is the large-N
+        # version of the same test)
+        seed_dev = max(np.abs(t - band.mean).max() for t in raw_tr)
+        for mult, ratio, pred in zip(study["meta"]["lossy_multiples"],
+                                     study["meta"]["lossy_ratios"],
+                                     study["lossy_preds"]):
+            traj = np.asarray(fn(per_sim_series(study, pred))).reshape(-1)
+            _, frac = band_contains(band, traj, frac_required=0.9)
+            dev = np.abs(traj - band.mean).max() / max(seed_dev, 1e-9)
+            benign = dev <= 1.5 or frac >= 0.9
+            rows.append((f"variability_band/{metric_name}/x{mult:g}@{ratio:.1f}x",
+                         0.0, f"inside_frac={frac:.3f} "
+                              f"dev_vs_seeds={dev:.2f} benign={benign}"))
+    dt = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    return [(n, dt, d) for n, _, d in rows]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

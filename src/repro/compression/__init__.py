@@ -1,0 +1,32 @@
+"""TPU-adapted ZFP-style error-bounded lossy compression.
+
+Public API:
+  encode_fixed_rate / decode_fixed_rate   -- uniform bits-per-value (dense layout)
+  encode_fixed_accuracy / decode          -- per-block plane counts, true error bound
+  CompressedField                         -- pytree container + logical byte count
+"""
+from repro.compression.transform import Q_FIXED_POINT, TOTAL_PLANES
+from repro.compression.zfp import (
+    CompressedField,
+    compressed_nbytes,
+    compression_ratio,
+    decode,
+    decode_fixed_rate,
+    encode_fixed_accuracy,
+    encode_fixed_rate,
+)
+from repro.compression.transform import blockify, deblockify
+
+__all__ = [
+    "CompressedField",
+    "Q_FIXED_POINT",
+    "TOTAL_PLANES",
+    "blockify",
+    "deblockify",
+    "compressed_nbytes",
+    "compression_ratio",
+    "decode",
+    "decode_fixed_rate",
+    "encode_fixed_accuracy",
+    "encode_fixed_rate",
+]

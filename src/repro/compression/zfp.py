@@ -1,0 +1,181 @@
+"""TPU-adapted ZFP codec: fixed-rate and error-bounded fixed-accuracy modes.
+
+Layout differences vs CPU ZFP (see DESIGN.md §3): bit planes are packed two
+per int32 word at deterministic per-block offsets (no group testing, no
+variable-length bitstream), so decode is fully lane-parallel.  Fixed-accuracy
+mode keeps a per-block plane count and *verifies* the L-inf bound with a
+vectorized correction loop, giving a true error-bounded guarantee.
+
+Logical storage (what would hit disk/network with the two-level layout):
+  fixed-rate:      nb * (1 byte emax + 2 * bits_per_16values... see nbytes)
+  fixed-accuracy:  nb * (2 bytes header) + sum_b 2 * nplanes_b bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression import transform as T
+
+GUARD_BITS = 2          # optimistic initial guess; correction loop enforces bound
+MAX_FIX_ITERS = 6
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompressedField:
+    """Pytree container for one compressed array.
+
+    payload : (nb, W) int32  -- packed bit planes (W static; planes beyond
+                                 nplanes[b] are zero for fixed-accuracy)
+    emax    : (nb,)  int32   -- per-block shared exponent
+    nplanes : (nb,)  int32   -- per-block kept planes (uniform for fixed-rate)
+    shape   : original array shape (static)
+    padded_shape : shape after padding trailing dims to multiples of 4 (static)
+    """
+    payload: jnp.ndarray
+    emax: jnp.ndarray
+    nplanes: jnp.ndarray
+    shape: Tuple[int, ...]
+    padded_shape: Tuple[int, ...]
+
+    def tree_flatten(self):
+        return (self.payload, self.emax, self.nplanes), (self.shape, self.padded_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        payload, emax, nplanes = children
+        return cls(payload, emax, nplanes, aux[0], aux[1])
+
+
+# ---------------------------------------------------------------------------
+# fixed-rate
+# ---------------------------------------------------------------------------
+
+def _encode_blocks(blocks_f: jnp.ndarray):
+    emax = T.block_emax(blocks_f)
+    qi = T.quantize_blocks(blocks_f, emax)
+    coef = T.fwd_transform_2d(qi)
+    u = T.int2nb(coef)
+    return u, emax
+
+
+def _decode_blocks(u: jnp.ndarray, emax: jnp.ndarray, dtype=jnp.float32):
+    coef = T.nb2int(u)
+    qi = T.inv_transform_2d(coef)
+    return T.dequantize_blocks(qi, emax, dtype)
+
+
+@partial(jax.jit, static_argnames=("bits_per_value",))
+def encode_fixed_rate(x: jnp.ndarray, bits_per_value: int) -> CompressedField:
+    """Compress with a uniform per-value plane count (dense payload layout)."""
+    assert 0 < bits_per_value <= T.TOTAL_PLANES
+    shape = x.shape
+    xp = T.pad_to_blocks(x.astype(jnp.float32))
+    blocks = T.blockify(xp)
+    u, emax = _encode_blocks(blocks)
+    nplanes = jnp.full((blocks.shape[0],), bits_per_value, dtype=jnp.int32)
+    u = T.truncate_planes(u, nplanes)
+    num_words = (bits_per_value + 1) // 2
+    payload = T.pack_planes(u, num_words)
+    return CompressedField(payload, emax, nplanes, shape, xp.shape)
+
+
+@jax.jit
+def decode_fixed_rate(cf: CompressedField) -> jnp.ndarray:
+    u = T.unpack_planes(cf.payload)
+    blocks = _decode_blocks(u, cf.emax)
+    xp = T.deblockify(blocks, cf.padded_shape)
+    return _crop(xp, cf.shape)
+
+
+# ---------------------------------------------------------------------------
+# fixed-accuracy (error-bounded)
+# ---------------------------------------------------------------------------
+
+def _planes_for_tolerance(emax: jnp.ndarray, tol: jnp.ndarray) -> jnp.ndarray:
+    log2tol = jnp.floor(jnp.log2(tol)).astype(jnp.int32)
+    b = emax - log2tol + GUARD_BITS
+    return jnp.clip(b, 0, T.TOTAL_PLANES).astype(jnp.int32)
+
+
+@jax.jit
+def encode_fixed_accuracy(x: jnp.ndarray, tol: float) -> CompressedField:
+    """Error-bounded compression: max |x - decode| <= tol, verified per block.
+
+    A vectorized correction loop re-checks the realized per-block L-inf error
+    and adds planes where violated (ZFP-style guarantees without the
+    variable-length stream).
+    """
+    shape = x.shape
+    xp = T.pad_to_blocks(x.astype(jnp.float32))
+    blocks = T.blockify(xp)
+    u_full, emax = _encode_blocks(blocks)
+    tol = jnp.asarray(tol, jnp.float32)
+    nplanes = _planes_for_tolerance(emax, tol)
+    # all-zero blocks (flushed emax=0) need no planes at all
+    nplanes = jnp.where(jnp.all(u_full == 0, axis=-1), 0, nplanes)
+
+    def block_err(npl):
+        u = T.truncate_planes(u_full, npl)
+        dec = _decode_blocks(u, emax)
+        return jnp.max(jnp.abs(dec - blocks), axis=-1)
+
+    def cond(state):
+        npl, it = state
+        bad = (block_err(npl) > tol) & (npl < T.TOTAL_PLANES)
+        return jnp.any(bad) & (it < MAX_FIX_ITERS)
+
+    def body(state):
+        npl, it = state
+        bad = block_err(npl) > tol
+        npl = jnp.where(bad, jnp.minimum(npl + 2, T.TOTAL_PLANES), npl)
+        return npl, it + 1
+
+    nplanes, _ = jax.lax.while_loop(cond, body, (nplanes, jnp.int32(0)))
+    u = T.truncate_planes(u_full, nplanes)
+    payload = T.pack_planes(u, T.MAX_WORDS)
+    return CompressedField(payload, emax, nplanes, shape, xp.shape)
+
+
+@jax.jit
+def decode(cf: CompressedField) -> jnp.ndarray:
+    """Decode either mode (payload planes beyond nplanes are already zero)."""
+    u = T.unpack_planes(cf.payload)
+    u = T.truncate_planes(u, cf.nplanes)
+    blocks = _decode_blocks(u, cf.emax)
+    xp = T.deblockify(blocks, cf.padded_shape)
+    return _crop(xp, cf.shape)
+
+
+# ---------------------------------------------------------------------------
+# sizes
+# ---------------------------------------------------------------------------
+
+def compressed_nbytes(cf: CompressedField) -> jnp.ndarray:
+    """Logical compressed size in bytes (two-level packed layout on disk).
+
+    1 byte emax + 1 byte plane count per block, + 2 bytes per kept plane
+    (16 lanes).  Fixed-rate streams skip the plane-count byte.
+    """
+    nb = cf.nplanes.shape[0]
+    uniform = jnp.all(cf.nplanes == cf.nplanes[0])
+    header = jnp.where(uniform, 1, 2) * nb
+    return header + 2 * jnp.sum(cf.nplanes)
+
+
+def compression_ratio(cf: CompressedField) -> jnp.ndarray:
+    import numpy as np
+    raw = int(np.prod(cf.shape)) * 4
+    return raw / compressed_nbytes(cf)
+
+
+def _crop(xp: jnp.ndarray, shape) -> jnp.ndarray:
+    if tuple(xp.shape) == tuple(shape):
+        return xp
+    slices = tuple(slice(0, s) for s in shape)
+    return xp[slices]

@@ -1,0 +1,5 @@
+from repro.configs.base import ArchConfig, ShapeCell, SHAPE_CELLS, cell_applicable
+from repro.configs.registry import ALL_ARCHS, get_config, reduced_config
+
+__all__ = ["ArchConfig", "ShapeCell", "SHAPE_CELLS", "cell_applicable",
+           "ALL_ARCHS", "get_config", "reduced_config"]

@@ -1,0 +1,16 @@
+"""The paper's primary contribution, as a composable JAX feature set:
+
+  tolerance      -- Algorithm 1: model-centric compression error tolerance
+  variability    -- training-randomness bands (the +/-2 sigma yardstick)
+  pipeline       -- CompressedArrayStore + online-decompression data pipeline
+  grad_compress  -- beyond-paper: error-bounded gradient compression for DP
+"""
+from repro.core.tolerance import ToleranceResult, find_tolerance, algorithm1_per_sample
+from repro.core.variability import VariabilityBand, compute_band, band_contains
+from repro.core.pipeline import CompressedArrayStore, RawArrayStore
+
+__all__ = [
+    "ToleranceResult", "find_tolerance", "algorithm1_per_sample",
+    "VariabilityBand", "compute_band", "band_contains",
+    "CompressedArrayStore", "RawArrayStore",
+]

@@ -1,0 +1,83 @@
+"""Algorithm 1: model-centric compression error tolerance (paper §IV).
+
+Given a model trained on lossless data, its own L1 prediction error ``e``
+per sample upper-bounds the detail the model can learn (Threshold 2,
+Fig. 4).  The search starts at ``t = 4^d * e / c(d)`` (ZFP expected-L1
+calibration, c(2) ~= 1.089 from Fox & Lindstrom) and doubles the L-inf
+tolerance while the realized L1 compression error stays at or below ``e``.
+No retraining is ever performed.  Runs per sample, returning a per-sample
+tolerance and realized compression ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression import (
+    compressed_nbytes, decode, encode_fixed_accuracy,
+)
+
+C_D = {1: 1.044, 2: 1.089, 3: 1.134, 4: 1.178}   # Fox & Lindstrom, Appendix A
+
+
+@dataclasses.dataclass
+class ToleranceResult:
+    tolerance: float            # final L-inf tolerance
+    model_l1: float             # e: model output L1 error (the bound)
+    compression_l1: float       # realized L1 error at `tolerance`
+    ratio: float                # realized compression ratio
+    iterations: int
+
+
+def find_tolerance(sample: np.ndarray, model_l1_error: float,
+                   d: int = 2, max_iters: int = 8) -> ToleranceResult:
+    """Algorithm 1 for one sample (any (..., H, W) float array).
+
+    model_l1_error: mean-|.| prediction error of the lossless-trained model
+    on this sample (same normalization as ``sample``).
+    """
+    e = float(model_l1_error)
+    x = jnp.asarray(sample, jnp.float32)
+    t = (4.0 ** d) * e / C_D[d]
+    best = None
+    iters = 0
+    while iters < max_iters:
+        iters += 1
+        cf = encode_fixed_accuracy(x, float(t))
+        xd = decode(cf)
+        l1 = float(jnp.mean(jnp.abs(xd - x)))
+        if l1 <= e:
+            ratio = float(x.size * 4 / int(compressed_nbytes(cf)))
+            saturated = best is not None and ratio <= best.ratio * 1.01
+            best = ToleranceResult(float(t), e, l1, ratio, iters)
+            if saturated:       # all blocks at zero planes: ratio cannot grow
+                break
+            t *= 2.0
+        else:
+            break
+    if best is None:        # initial guess already exceeded e: halve downward
+        while iters < max_iters:
+            iters += 1
+            t /= 2.0
+            cf = encode_fixed_accuracy(x, float(t))
+            xd = decode(cf)
+            l1 = float(jnp.mean(jnp.abs(xd - x)))
+            if l1 <= e:
+                best = ToleranceResult(float(t), e, l1,
+                                       float(x.size * 4 / int(compressed_nbytes(cf))),
+                                       iters)
+                break
+    if best is None:
+        best = ToleranceResult(float(t), e, float("inf"), 1.0, iters)
+    return best
+
+
+def algorithm1_per_sample(samples: Sequence[np.ndarray],
+                          model_l1_errors: Sequence[float],
+                          d: int = 2) -> list[ToleranceResult]:
+    """Per-sample adaptive tolerances for a dataset (paper Algorithm 1)."""
+    return [find_tolerance(s, e, d=d)
+            for s, e in zip(samples, model_l1_errors)]

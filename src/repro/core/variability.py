@@ -1,0 +1,60 @@
+"""Training-variability bands (paper §III): the yardstick for compression.
+
+Models trained with identical data/hyperparameters but different seeds form
+a distribution over every quality metric; the +/-2 sigma band over seeds is
+the natural noise floor.  A lossy-trained model whose metric trajectories
+stay inside the band is indistinguishable from training randomness ==
+compression is benign.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class VariabilityBand:
+    mean: np.ndarray      # (T,) or (T, K) mean metric over seed-models
+    std: np.ndarray       # same shape
+    n_models: int
+    sigmas: float = 2.0   # 95% band
+
+    @property
+    def lo(self) -> np.ndarray:
+        return self.mean - self.sigmas * self.std
+
+    @property
+    def hi(self) -> np.ndarray:
+        return self.mean + self.sigmas * self.std
+
+
+def compute_band(metric_per_model: Sequence[np.ndarray],
+                 sigmas: float = 2.0) -> VariabilityBand:
+    """metric_per_model: list over seeds of (T,)/(T,K) metric trajectories."""
+    stack = np.stack([np.asarray(m) for m in metric_per_model])
+    return VariabilityBand(mean=stack.mean(0), std=stack.std(0),
+                           n_models=len(metric_per_model), sigmas=sigmas)
+
+
+def band_contains(band: VariabilityBand, trajectory: np.ndarray,
+                  frac_required: float = 0.95) -> tuple[bool, float]:
+    """Is `trajectory` inside the band for >= frac_required of points?
+
+    Returns (benign?, fraction inside).  The paper's criterion: compression
+    is benign when the lossy model is indistinguishable from seed noise.
+    """
+    t = np.asarray(trajectory)
+    inside = (t >= band.lo) & (t <= band.hi)
+    frac = float(inside.mean())
+    return frac >= frac_required, frac
+
+
+def train_seed_ensemble(train_fn: Callable[[int], object], seeds: Sequence[int]):
+    """Train one model per seed with an identical configuration.
+
+    train_fn(seed) -> model params (or any evaluation artifact); mirrors the
+    paper's 5-30 raw-data models.
+    """
+    return [train_fn(int(s)) for s in seeds]

@@ -1,0 +1,3 @@
+from repro.data.loader import ShardedLoader, PrefetchLoader
+
+__all__ = ["ShardedLoader", "PrefetchLoader"]

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (
+    param_specs, opt_specs, batch_specs, cache_specs, make_shardings,
+)
+
+__all__ = ["param_specs", "opt_specs", "batch_specs", "cache_specs",
+           "make_shardings"]

@@ -1,0 +1,168 @@
+"""Sharding rules: logical parameter/activation axes -> PartitionSpec.
+
+Strategy (DESIGN.md §6):
+  * TP over "model": attention heads, FFN hidden, MoE experts (EP), SSM inner
+  * FSDP/ZeRO over "data": the non-TP weight dim of every large matrix;
+    optimizer moments inherit the same fully-sharded specs (ZeRO)
+  * DP batch over ("pod", "data"); params replicated across pods (weight
+    all-gathers stay on intra-pod ICI; only grad reduction crosses pods)
+  * decode KV caches: batch over ("pod","data"), sequence over "model"
+    (sequence-parallel KV -- GSPMD turns sharded-softmax into the
+    flash-decoding reduction pattern); batch=1 long-context shards sequence
+    over every axis
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# leaf-name -> spec for stacked (L, ...) layer params
+_LAYER_RULES: Dict[str, P] = {
+    "wq":        P(None, "data", "model", None),
+    "wk":        P(None, "data", "model", None),
+    "wv":        P(None, "data", "model", None),
+    "wo":        P(None, "model", None, "data"),
+    "bq":        P(None, "model", None),
+    "bk":        P(None, "model", None),
+    "bv":        P(None, "model", None),
+    "xwq":       P(None, "data", "model", None),
+    "xwk":       P(None, "data", "model", None),
+    "xwv":       P(None, "data", "model", None),
+    "xwo":       P(None, "model", None, "data"),
+    "w_gate":    P(None, "data", "model"),
+    "w_up":      P(None, "data", "model"),
+    "w_down":    P(None, "model", "data"),
+    "router":    P(None, "data", None),
+    "e_gate":    P(None, "model", "data", None),
+    "e_up":      P(None, "model", "data", None),
+    "e_down":    P(None, "model", None, "data"),
+    "ssm_in":    P(None, "data", "model"),
+    "ssm_conv_w": P(None, None, "model"),
+    "ssm_out":   P(None, "model", "data"),
+    "ssm_norm":  P(None, "model"),
+    "ssm_A":     P(None, None),
+    "ssm_D":     P(None, None),
+    "ssm_dt_bias": P(None, None),
+    "ln1":       P(None, None),
+    "ln2":       P(None, None),
+    "ln_x":      P(None, None),
+}
+
+_TOP_RULES: Dict[str, P] = {
+    "embed":         P("model", None),   # vocab-sharded; tied head -> (None, model)
+    "lm_head":       P(None, "model"),   # vocab-sharded logits for chunked CE
+    "final_norm":    P(None),
+    "enc_norm":      P(None),
+    "frontend_proj": P(None, "model"),
+}
+
+
+def param_specs(params_shape_tree) -> Any:
+    """Spec pytree mirroring the param tree (shapes from jax.eval_shape)."""
+
+    def walk(prefix, tree):
+        if isinstance(tree, dict):
+            return {k: walk(k, v) for k, v in tree.items()}
+        if prefix in _TOP_RULES:
+            return _TOP_RULES[prefix]
+        if prefix in _LAYER_RULES:
+            spec = _LAYER_RULES[prefix]
+            # stacked layer leaves have rank len(spec); top-rank mismatch
+            # (e.g. bias ranks) falls back to replication
+            if len(spec) == getattr(tree, "ndim", len(spec)):
+                return spec
+            return P()
+        return P()
+
+    out = {}
+    for k, v in params_shape_tree.items():
+        if k in ("layers", "enc_layers"):
+            out[k] = {n: walk(n, leaf) for n, leaf in v.items()}
+        else:
+            out[k] = walk(k, v)
+    return out
+
+
+def opt_specs(param_spec_tree) -> Any:
+    """AdamState(step, m, v): moments fully sharded like params (ZeRO)."""
+    from repro.train.optimizer import AdamState
+    return AdamState(step=P(), m=param_spec_tree, v=param_spec_tree)
+
+
+def batch_specs(cfg: ArchConfig, kind: str, multi_pod: bool) -> Dict[str, P]:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if kind == "decode":
+        tok = P(dp)          # (B,)
+    else:
+        tok = P(dp, None)    # (B, S)
+    specs = {"tokens": tok, "labels": P(dp, None)}
+    if cfg.frontend != "none":
+        specs["frontend_embeds"] = P(dp, None, None)
+    if cfg.encoder_layers:
+        specs["encoder_embeds"] = P(dp, None, None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, batch: int, multi_pod: bool,
+                n_pod: int = 2, n_data: int = 16) -> Dict[str, P]:
+    """Stacked (L, B, S, ...) cache shardings for serving."""
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    n_dp = (n_pod * n_data) if multi_pod else n_data
+    if batch >= n_dp:
+        bspec, sspec = dp_axes, ("model",)
+    elif batch == 1:
+        # long-context single stream: sequence over every axis
+        bspec, sspec = None, dp_axes + ("model",)
+    else:
+        bspec, sspec = dp_axes, ("model",)
+    specs: Dict[str, P] = {}
+    if cfg.family != "ssm":
+        specs["k"] = P(None, bspec, sspec, None, None)
+        specs["v"] = P(None, bspec, sspec, None, None)
+    if cfg.family == "ssm" or cfg.hybrid:
+        specs["conv"] = P(None, bspec, None, "model")
+        specs["ssm"] = P(None, bspec, "model", None, None)
+    if cfg.encoder_layers:
+        specs["xk"] = P(None, bspec, sspec, None, None)
+        specs["xv"] = P(None, bspec, sspec, None, None)
+    return specs
+
+
+def resolve_specs(spec_tree, shape_tree, mesh: Mesh):
+    """Drop sharding axes whose size does not divide the dim (e.g. kv_heads=8
+    over model=16, 25 query heads, odd vocab sizes).  The dropped axis means
+    replication for that dim -- the Megatron convention when kv_heads < TP.
+    Divisibility-forced replication is a named hillclimb lever (§Perf)."""
+    import math
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        shape = getattr(leaf, "shape", None)
+        if shape is None:
+            return spec
+        dims = []
+        for i in range(len(shape)):
+            ax = spec[i] if i < len(spec) else None
+            if ax is None:
+                dims.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = math.prod(axis_sizes[a] for a in axes)
+            dims.append(ax if shape[i] % total == 0 else None)
+        return P(*dims)
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_shardings(mesh: Mesh, spec_tree, shape_tree=None):
+    if shape_tree is not None:
+        spec_tree = resolve_specs(spec_tree, shape_tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: compiled Pallas on TPU, ``interpret=True`` elsewhere (this
+container is CPU-only; interpret mode runs the kernel body in Python and is
+used for correctness validation against ref.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression import transform as T
+from repro.compression.zfp import CompressedField
+from repro.kernels import zfp_codec
+from repro.kernels import flash_attention as _fa
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def zfp_decode_blocks(payload, emax, bits_per_value):
+    return zfp_codec.zfp_decode_blocks(payload, emax, bits_per_value,
+                                       interpret=_interpret())
+
+
+def zfp_decode_blocks_fast(payload, emax, bits_per_value):
+    """Throughput path: compiled Pallas on TPU, compiled jnp oracle on CPU.
+
+    Interpret-mode Pallas executes the kernel body in Python -- fine for
+    correctness validation, wrong for measuring pipeline throughput.  The
+    oracle is jit-compiled XLA and numerically identical (tests assert so).
+    """
+    if _interpret():
+        return _ref_decode_jit(payload, emax)
+    return zfp_codec.zfp_decode_blocks(payload, emax, bits_per_value)
+
+
+@jax.jit
+def _ref_decode_jit(payload, emax):
+    from repro.kernels import ref
+    return ref.zfp_decode_blocks_ref(payload, emax, payload.shape[1] * 2)
+
+
+def zfp_encode_blocks(blocks, bits_per_value):
+    return zfp_codec.zfp_encode_blocks(blocks, bits_per_value,
+                                       interpret=_interpret())
+
+
+def decode_field(cf: CompressedField) -> jnp.ndarray:
+    """Kernel-path decode of a fixed-rate CompressedField."""
+    bits = int(cf.payload.shape[1]) * 2
+    blocks = zfp_decode_blocks(cf.payload, cf.emax, bits)
+    xp = T.deblockify(blocks, cf.padded_shape)
+    slices = tuple(slice(0, s) for s in cf.shape)
+    return xp[slices]
+
+
+def encode_field(x: jnp.ndarray, bits_per_value: int) -> CompressedField:
+    """Kernel-path fixed-rate encode of an array (trailing 2 dims blocked)."""
+    shape = x.shape
+    xp = T.pad_to_blocks(x.astype(jnp.float32))
+    blocks = T.blockify(xp)
+    payload, emax = zfp_encode_blocks(blocks, bits_per_value)
+    nplanes = jnp.full((blocks.shape[0],), bits_per_value, jnp.int32)
+    return CompressedField(payload, emax, nplanes, shape, xp.shape)
+
+
+def flash_attention(q, k, v, *, causal=True, sm_scale=None, window=None):
+    return _fa.flash_attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                               window=window, interpret=_interpret())

@@ -1,0 +1,191 @@
+"""Pallas TPU kernels for the fixed-rate ZFP block codec.
+
+Layout: blocks are (nb, 16) lanes (one 4x4 spatial block per row), payload is
+(nb, W) int32 with two 16-lane bit planes per word, MSB plane first.  The
+grid tiles the block axis; each tile holds BLOCK_TILE rows in VMEM:
+
+  decode:  payload tile (BT, W) int32 + emax tile (BT, 1) int32 -> (BT, 16) f32
+  encode:  (BT, 16) f32 -> payload tile (BT, W) int32 + emax (BT, 1) int32
+
+All arithmetic is bitwise/elementwise on int32 lanes plus tiny static loops
+-- pure VPU work; the kernel is memory-bound by design (that is the point:
+on-device decompression trades HBM/interconnect bytes for VPU cycles).
+
+The kernel body re-implements the transform with TPU idioms (2D broadcasted
+iota, no 1D arrays); tests validate against the independent pure-jnp oracle
+in ref.py over shape sweeps (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.compression.transform import Q_FIXED_POINT, TOTAL_PLANES
+
+BLOCK_TILE = 256          # blocks per VMEM tile: 256*16*4B = 16 KiB out tile
+_NEG = -1431655766  # 0xAAAAAAAA as int32 (python int: kernels may not capture jax arrays)
+
+
+def _lanes16():
+    return jax.lax.broadcasted_iota(jnp.int32, (1, 16), 1)
+
+
+def _inv_lift4(x, y, z, w):
+    y = y + (w >> 1)
+    w = w - (y >> 1)
+    y = y + w
+    w = (w << 1) - y
+    z = z + x
+    x = (x << 1) - z
+    y = y + z
+    z = (z << 1) - y
+    w = w + x
+    x = (x << 1) - w
+    return x, y, z, w
+
+
+def _fwd_lift4(x, y, z, w):
+    x = x + w
+    x = x >> 1
+    w = w - x
+    z = z + y
+    z = z >> 1
+    y = y - z
+    x = x + z
+    x = x >> 1
+    z = z - x
+    w = w + y
+    w = w >> 1
+    y = y - w
+    w = w + (y >> 1)
+    y = y - (w >> 1)
+    return x, y, z, w
+
+
+def _inv_transform_tile(coef):
+    """(BT, 16) int32 inverse 2D lift, slicing lanes statically."""
+    rows = [coef[:, 0:4], coef[:, 4:8], coef[:, 8:12], coef[:, 12:16]]
+    x, y, z, w = _inv_lift4(*rows)
+    b = jnp.concatenate([x, y, z, w], axis=-1)
+    cols = [b[:, 0::4], b[:, 1::4], b[:, 2::4], b[:, 3::4]]
+    x, y, z, w = _inv_lift4(*cols)
+    out = jnp.stack([x, y, z, w], axis=-1)            # (BT, 4, 4)
+    return out.reshape(coef.shape[0], 16)
+
+
+def _fwd_transform_tile(qi):
+    cols = [qi[:, 0::4], qi[:, 1::4], qi[:, 2::4], qi[:, 3::4]]
+    x, y, z, w = _fwd_lift4(*cols)
+    b = jnp.stack([x, y, z, w], axis=-1).reshape(qi.shape[0], 16)
+    rows = [b[:, 0:4], b[:, 4:8], b[:, 8:12], b[:, 12:16]]
+    x, y, z, w = _fwd_lift4(*rows)
+    return jnp.concatenate([x, y, z, w], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(payload_ref, emax_ref, out_ref, *, num_words):
+    payload = payload_ref[...]                        # (BT, W) int32
+    emax = emax_ref[...]                              # (BT, 1) int32
+    lanes = _lanes16()
+    u = jnp.zeros((payload.shape[0], 16), jnp.int32)
+    for k in range(num_words):                        # static unroll
+        word = payload[:, k][:, None]                 # (BT, 1)
+        p_hi = TOTAL_PLANES - 1 - 2 * k
+        p_lo = TOTAL_PLANES - 2 - 2 * k
+        u = u | (((word >> lanes) & 1) << p_hi)
+        if p_lo >= 0:
+            u = u | (((word >> (lanes + 16)) & 1) << p_lo)
+    neg = jnp.int32(_NEG)
+    coef = (u ^ neg) - neg                            # negabinary -> int
+    qi = _inv_transform_tile(coef)
+    scale = jnp.exp2((emax - Q_FIXED_POINT).astype(jnp.float32))
+    out_ref[...] = qi.astype(jnp.float32) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits_per_value", "interpret"))
+def zfp_decode_blocks(payload: jnp.ndarray, emax: jnp.ndarray,
+                      bits_per_value: int, interpret: bool = False) -> jnp.ndarray:
+    """Pallas fixed-rate decode: ((nb, W) int32, (nb,) int32) -> (nb, 16) f32."""
+    nb, num_words = payload.shape
+    assert num_words == (bits_per_value + 1) // 2
+    pad = (-nb) % BLOCK_TILE
+    if pad:
+        payload = jnp.pad(payload, ((0, pad), (0, 0)))
+        emax = jnp.pad(emax, ((0, pad),))
+    nbp = payload.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, num_words=num_words),
+        grid=(nbp // BLOCK_TILE,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_TILE, num_words), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_TILE, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, 16), jnp.float32),
+        interpret=interpret,
+    )(payload, emax[:, None])
+    return out[:nb]
+
+
+# ---------------------------------------------------------------------------
+# encode
+# ---------------------------------------------------------------------------
+
+def _encode_kernel(blocks_ref, payload_ref, emax_ref, *, num_words, bits):
+    x = blocks_ref[...]                               # (BT, 16) f32
+    maxabs = jnp.max(jnp.abs(x), axis=-1, keepdims=True)   # (BT, 1)
+    # frexp exponent via bit twiddling: x = m 2^e, m in [0.5, 1)
+    mbits = jax.lax.bitcast_convert_type(maxabs, jnp.int32)
+    e = ((mbits >> 23) & 0xFF) - 126
+    emax = jnp.where(maxabs >= 2.0 ** -120, e, 0).astype(jnp.int32)
+    scale = jnp.exp2((Q_FIXED_POINT - emax).astype(jnp.float32))
+    qi = jnp.round(x * scale).astype(jnp.int32)
+    coef = _fwd_transform_tile(qi)
+    neg = jnp.int32(_NEG)
+    u = (coef + neg) ^ neg                            # int -> negabinary
+    shift = TOTAL_PLANES - bits
+    u = u & (jnp.int32(-1) << shift)                  # truncate planes
+    lanes = _lanes16()
+    for k in range(num_words):
+        p_hi = TOTAL_PLANES - 1 - 2 * k
+        p_lo = TOTAL_PLANES - 2 - 2 * k
+        plane_hi = jnp.sum(((u >> p_hi) & 1) << lanes, axis=-1, dtype=jnp.int32)
+        if p_lo >= 0:
+            plane_lo = jnp.sum(((u >> p_lo) & 1) << lanes, axis=-1, dtype=jnp.int32)
+        else:
+            plane_lo = jnp.zeros_like(plane_hi)
+        payload_ref[:, k] = plane_hi | (plane_lo << 16)
+    emax_ref[...] = emax
+
+
+@functools.partial(jax.jit, static_argnames=("bits_per_value", "interpret"))
+def zfp_encode_blocks(blocks: jnp.ndarray, bits_per_value: int,
+                      interpret: bool = False):
+    """Pallas fixed-rate encode: (nb, 16) f32 -> ((nb, W) int32, (nb,) int32)."""
+    nb = blocks.shape[0]
+    num_words = (bits_per_value + 1) // 2
+    pad = (-nb) % BLOCK_TILE
+    if pad:
+        blocks = jnp.pad(blocks, ((0, pad), (0, 0)))
+    nbp = blocks.shape[0]
+    payload, emax = pl.pallas_call(
+        functools.partial(_encode_kernel, num_words=num_words, bits=bits_per_value),
+        grid=(nbp // BLOCK_TILE,),
+        in_specs=[pl.BlockSpec((BLOCK_TILE, 16), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((BLOCK_TILE, num_words), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbp, num_words), jnp.int32),
+            jax.ShapeDtypeStruct((nbp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(blocks)
+    return payload[:nb], emax[:nb, 0]

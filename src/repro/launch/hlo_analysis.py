@@ -1,0 +1,312 @@
+"""Loop-aware accounting over partitioned HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE -- a
+``lax.scan`` over 48 layers contributes its body a single time, so flops /
+collective bytes are undercounted by the trip count.  This parser rebuilds
+the call graph (while bodies, fusions, calls, conditionals), extracts each
+while loop's trip count from its condition's compare-against-constant, and
+scales per-computation totals by the product of enclosing trip counts.
+
+Outputs per-device numbers (the HLO is the post-GSPMD per-device program):
+  flops            -- 2*prod(result)*prod(contracting dims) per dot
+  collective bytes -- operand bytes of all-reduce / all-gather /
+                      reduce-scatter / all-to-all / collective-permute
+  dot bytes        -- operand+result bytes of dots (matmul HBM floor)
+
+Validated against cost_analysis on loop-free programs (tests/test_dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _parse_shape(text: str) -> Tuple[Optional[List[int]], int]:
+    """First shape in ``text`` -> (dims, nbytes)."""
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None, 0
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    n = 1
+    for d in dims:
+        n *= d
+    return dims, n * _DTYPE_BYTES[m.group(1)]
+
+
+def _tuple_bytes(text: str) -> int:
+    """Sum of all shapes in a (possibly tuple) type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _split_type(rest: str):
+    """Split '<type> <opcode>(...' where type may be a tuple containing
+    nested parens and /*index=N*/ comments."""
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[:i + 1], rest[i + 1:]
+        return rest, ""
+    head, _, tail = rest.partition(" ")
+    return head, " " + tail
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if (stripped.endswith("{") and "(" in stripped
+                and "=" not in stripped.split("(")[0]):
+            header = stripped.split("(")[0].replace("ENTRY", "").strip()
+            cur = Computation(name=header.lstrip("%").strip(), instructions=[])
+            comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            continue
+        m = _NAME_RE.match(line)
+        if not m or cur is None:
+            continue
+        name = m.group(1)
+        rtype, rest = _split_type(line[m.end():])
+        om = _OPCODE_RE.match(rest)
+        if not om:
+            continue
+        opcode = om.group(1)
+        args_part = rest[om.end():].split(")")[0]
+        operands = re.findall(r"%([\w.\-]+)", args_part)
+        if not operands:       # names may appear without % in newer dumps
+            operands = [t.strip() for t in args_part.split(",")
+                        if t.strip() and "[" not in t and t.strip()
+                        and t.strip()[0].isalpha()]
+        cur.instructions.append(Instruction(name, opcode, rtype, operands,
+                                            stripped))
+    return comps
+
+
+def _result_sizes(comps: Dict[str, Computation]) -> Dict[str, Tuple]:
+    sizes = {}
+    for comp in comps.values():
+        for ins in comp.instructions:
+            sizes[ins.name] = _parse_shape(ins.result_type)
+    return sizes
+
+
+def _constant_values(comps: Dict[str, Computation]) -> Dict[str, int]:
+    out = {}
+    rx = re.compile(r"constant\((-?\d+)\)")
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.opcode == "constant":
+                m = rx.search(ins.raw)
+                if m:
+                    out[ins.name] = int(m.group(1))
+    return out
+
+
+def _trip_count(cond: Computation, consts: Dict[str, int]) -> int:
+    """Scan-lowered loops compare the counter against a constant bound.
+
+    The compare is often wrapped in a fusion, so the robust signal is the
+    largest integer constant defined in the condition computation (the loop
+    bound; other constants are 0/1 strides).
+    """
+    best = 1
+    for ins in cond.instructions:
+        if ins.opcode == "compare":
+            for op in ins.operands:
+                if op in consts and consts[op] > best:
+                    best = consts[op]
+        if ins.opcode == "constant" and ins.name in consts:
+            if 1 < consts[ins.name] <= 10_000_000 and consts[ins.name] > best:
+                best = consts[ins.name]
+    return best
+
+
+_CALL_SINGLE_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_CALL_SET_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _callees(ins: Instruction) -> List[str]:
+    names = [m.group(1) for m in _CALL_SINGLE_RE.finditer(ins.raw)]
+    for m in _CALL_SET_RE.finditer(ins.raw):
+        names.extend(n.strip().lstrip("%") for n in m.group(1).split(","))
+    return names
+
+
+def _dot_flops(ins: Instruction, sizes) -> float:
+    rdims, _ = _parse_shape(ins.result_type)
+    if rdims is None:
+        return 0.0
+    out = 1
+    for d in rdims:
+        out *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.raw)
+    contract = 1
+    if m and ins.operands:
+        lhs = sizes.get(ins.operands[0], (None, 0))[0]
+        if lhs:
+            for idx in m.group(1).split(","):
+                if idx:
+                    contract *= lhs[int(idx)]
+    return 2.0 * out * contract
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    """Loop-scaled per-device totals from partitioned HLO text."""
+    comps = parse_module(hlo)
+    sizes = _result_sizes(comps)
+    consts = _constant_values(comps)
+
+    # multipliers: walk call graph from ENTRY (the computation not called by
+    # anyone); while bodies/conds get x trip_count
+    called_by: Dict[str, List[Tuple[str, float]]] = {}
+    for comp in comps.values():
+        for ins in comp.instructions:
+            mult = 1.0
+            if ins.opcode == "while":
+                cond_names = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+                if cond_names and cond_names.group(1) in comps:
+                    mult = float(_trip_count(comps[cond_names.group(1)], consts))
+            for callee in _callees(ins):
+                if callee in comps:
+                    called_by.setdefault(callee, []).append((comp.name, mult))
+
+    roots = [c for c in comps if c not in called_by]
+    mults: Dict[str, float] = {}
+
+    def resolve(name: str, seen=()) -> float:
+        if name in mults:
+            return mults[name]
+        if name in seen:
+            return 1.0
+        callers = called_by.get(name)
+        if not callers:
+            mults[name] = 1.0
+            return 1.0
+        m = max(resolve(cn, seen + (name,)) * mu for cn, mu in callers)
+        mults[name] = m
+        return m
+
+    for c in comps:
+        resolve(c)
+
+    flops = 0.0
+    dot_bytes = 0.0
+    coll: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    coll_tpu: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    for comp in comps.values():
+        mult = mults.get(comp.name, 1.0)
+        for ins in comp.instructions:
+            if ins.opcode == "dot":
+                flops += _dot_flops(ins, sizes) * mult
+                ob = sum(sizes.get(o, (None, 0))[1] for o in ins.operands)
+                dot_bytes += (ob + _tuple_bytes(ins.result_type)) * mult
+            else:
+                base = ins.opcode.replace("-start", "")
+                if base in _COLLECTIVES:
+                    ob = sum(sizes.get(o, (None, 0))[1] for o in ins.operands)
+                    if ob == 0:
+                        ob = _tuple_bytes(ins.result_type)
+                    coll[base] += ob * mult
+                    # XLA:CPU promotes bf16 reductions to f32
+                    # (to_apply=%add..._promoted); TPU ICI reduces natively
+                    # in bf16, so corrected accounting counts those at wire
+                    # dtype (x0.5).  Validated in tests/test_dryrun.py.
+                    if "promoted" in ins.raw and "f32" in ins.result_type:
+                        ob = ob // 2
+                    coll_tpu[base] += ob * mult
+    return {"flops": flops, "dot_bytes": dot_bytes,
+            "collective_bytes": sum(coll.values()), "collectives": coll,
+            "collective_bytes_tpu": sum(coll_tpu.values()),
+            "collectives_tpu": coll_tpu, "roots": roots}
+
+
+def top_collectives(hlo: str, n: int = 12):
+    """Largest loop-scaled collectives: [(scaled_bytes, base, mult, op,
+    metadata op_name)] -- the §Perf hillclimb's primary profile view."""
+    comps = parse_module(hlo)
+    sizes = _result_sizes(comps)
+    consts = _constant_values(comps)
+    called_by: Dict[str, list] = {}
+    for comp in comps.values():
+        for ins in comp.instructions:
+            mult = 1.0
+            if ins.opcode == "while":
+                m = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+                if m and m.group(1) in comps:
+                    mult = float(_trip_count(comps[m.group(1)], consts))
+            for callee in _callees(ins):
+                if callee in comps:
+                    called_by.setdefault(callee, []).append((comp.name, mult))
+    mults: Dict[str, float] = {}
+
+    def resolve(name, seen=()):
+        if name in mults:
+            return mults[name]
+        if name in seen:
+            return 1.0
+        callers = called_by.get(name)
+        if not callers:
+            mults[name] = 1.0
+            return 1.0
+        m = max(resolve(cn, seen + (name,)) * mu for cn, mu in callers)
+        mults[name] = m
+        return m
+
+    for c in comps:
+        resolve(c)
+    rows = []
+    for comp in comps.values():
+        for ins in comp.instructions:
+            base_op = ins.opcode.replace("-start", "")
+            if base_op in _COLLECTIVES:
+                ob = sum(sizes.get(o, (None, 0))[1] for o in ins.operands) \
+                    or _tuple_bytes(ins.result_type)
+                meta = re.search(r'op_name="([^"]*)"', ins.raw)
+                rows.append((ob * mults[comp.name], ob, mults[comp.name],
+                             base_op, meta.group(1) if meta else ins.name))
+    rows.sort(reverse=True)
+    return rows[:n]

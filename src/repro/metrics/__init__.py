@@ -1,0 +1,7 @@
+from repro.metrics.physics import (
+    total_mass, total_momentum, mixing_layer_thickness, timeseries_correlation,
+)
+from repro.metrics.image import psnr
+
+__all__ = ["total_mass", "total_momentum", "mixing_layer_thickness",
+           "timeseries_correlation", "psnr"]

@@ -1,0 +1,16 @@
+"""Image-quality metrics."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def psnr(ref: jnp.ndarray, test: jnp.ndarray, axis=(-2, -1)) -> jnp.ndarray:
+    """Peak signal-to-noise ratio over the given grid axes, per field/sample.
+
+    Peak is the per-sample dynamic range of the reference (max - min), the
+    convention used for floating-point simulation fields.
+    """
+    mse = jnp.mean((ref - test) ** 2, axis=axis)
+    peak = (jnp.max(ref, axis=axis) - jnp.min(ref, axis=axis))
+    peak = jnp.maximum(peak, 1e-12)
+    return 10.0 * jnp.log10(peak ** 2 / jnp.maximum(mse, 1e-20))

@@ -1,0 +1,43 @@
+"""Physics-based quality metrics (paper Eqs. 2-4).
+
+Fields are (..., H, W, 6) with channel order
+(density, vx, vy, pressure, energy, material); H is the y (gravity) axis.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def total_mass(fields: jnp.ndarray, cell_area: float = 1.0) -> jnp.ndarray:
+    """m = sum_i A rho_i  (Eq. 2). Reduces the trailing (H, W) grid."""
+    return cell_area * jnp.sum(fields[..., 0], axis=(-2, -1))
+
+
+def total_momentum(fields: jnp.ndarray, cell_area: float = 1.0) -> jnp.ndarray:
+    """p = sum_i A rho_i v_i  (Eq. 3). Returns (..., 2) = (px, py)."""
+    rho = fields[..., 0]
+    px = cell_area * jnp.sum(rho * fields[..., 1], axis=(-2, -1))
+    py = cell_area * jnp.sum(rho * fields[..., 2], axis=(-2, -1))
+    return jnp.stack([px, py], axis=-1)
+
+
+def mixing_layer_thickness(fields: jnp.ndarray, rho1: float, rho2: float,
+                           dy: float = 1.0) -> jnp.ndarray:
+    """h(t) = H - 2/(rho2-rho1) * integral |rho_bar(y) - (rho1+rho2)/2| dy (Eq. 4).
+
+    fields: (..., H, W, 6); returns (...,) thickness in the same units as dy*H.
+    """
+    rho_bar = jnp.mean(fields[..., 0], axis=-1)           # (..., H)
+    height = fields.shape[-3] * dy
+    mid = 0.5 * (rho1 + rho2)
+    integral = jnp.sum(jnp.abs(rho_bar - mid), axis=-1) * dy
+    return height - (2.0 / (rho2 - rho1)) * integral
+
+
+def timeseries_correlation(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Pearson correlation along the last (time) axis (Fig. 8 statistic)."""
+    am = a - jnp.mean(a, -1, keepdims=True)
+    bm = b - jnp.mean(b, -1, keepdims=True)
+    num = jnp.sum(am * bm, -1)
+    den = jnp.sqrt(jnp.sum(am * am, -1) * jnp.sum(bm * bm, -1))
+    return num / jnp.maximum(den, 1e-12)

@@ -1,0 +1,94 @@
+"""Minimal functional NN layer library (raw JAX pytrees; no flax/optax here).
+
+Every layer is (init_fn -> params pytree, apply_fn).  Initializers follow
+He/Kaiming for conv/dense (paper cites [15]).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def he_normal(key, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * math.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim, out_dim, dtype=jnp.float32):
+    kw, _ = jax.random.split(key)
+    return {"w": he_normal(kw, (in_dim, out_dim), in_dim, dtype),
+            "b": jnp.zeros((out_dim,), dtype)}
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# conv (NHWC, HWIO)
+# ---------------------------------------------------------------------------
+
+def conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    k, _ = jax.random.split(key)
+    return {"w": he_normal(k, (kh, kw, cin, cout), kh * kw * cin, dtype),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def conv2d(p, x, stride=1, padding="SAME"):
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + p["b"]
+
+
+def conv2d_transpose(p, x, stride=2):
+    """Fractionally-strided conv (DCGAN upsampling) via lhs dilation.
+
+    Explicit padding chosen so out = in * stride exactly:
+    total pad = kernel + stride - 2 per spatial dim.
+    """
+    kh, kw = p["w"].shape[0], p["w"].shape[1]
+    ph, pw = kh + stride - 2, kw + stride - 2
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1),
+        padding=((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2)),
+        lhs_dilation=(stride, stride),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def layernorm_init(dim, dtype=jnp.float32):
+    return {"g": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def rmsnorm_init(dim, dtype=jnp.float32):
+    return {"g": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"]
+
+
+def leaky_relu(x, slope=0.2):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,96 @@
+"""DCGAN-backbone generative surrogate (paper Fig. 1, nine conv layers).
+
+Maps the simulation input-parameter vector (+ normalized time) to the six
+output fields on the grid: x -> dense -> (H/16, W/16, C) -> 4 fractionally-
+strided upsampling stages (each: convT + conv) -> output conv => 9 conv
+layers total.  Trained with the paper's L1 loss (Eq. 1), Adam 1e-4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.sim.solver import PARAM_DIM
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateConfig:
+    height: int = 96
+    width: int = 32
+    fields: int = 6
+    base_channels: int = 256
+    cond_dim: int = PARAM_DIM + 1      # params + normalized time
+
+
+def init_surrogate(key, cfg: SurrogateConfig):
+    h0, w0 = cfg.height // 16, cfg.width // 16
+    c = cfg.base_channels
+    keys = jax.random.split(key, 16)
+    params = {
+        "proj": nn.dense_init(keys[0], cfg.cond_dim, h0 * w0 * c),
+        "ln_in": nn.layernorm_init(c),
+    }
+    ch = c
+    for i in range(4):                              # 4 upsample stages
+        cout = max(ch // 2, 32)
+        params[f"up{i}_t"] = nn.conv_init(keys[1 + 2 * i], 4, 4, ch, cout)
+        params[f"up{i}_c"] = nn.conv_init(keys[2 + 2 * i], 3, 3, cout, cout)
+        params[f"up{i}_ln"] = nn.layernorm_init(cout)
+        ch = cout
+    params["out"] = nn.conv_init(keys[10], 3, 3, ch, cfg.fields)
+    return params
+
+
+def apply_surrogate(params, cfg: SurrogateConfig, cond: jnp.ndarray) -> jnp.ndarray:
+    """cond: (B, cond_dim) -> (B, H, W, fields) normalized field prediction."""
+    h0, w0 = cfg.height // 16, cfg.width // 16
+    x = nn.dense(params["proj"], cond)
+    x = x.reshape(x.shape[0], h0, w0, cfg.base_channels)
+    x = nn.leaky_relu(nn.layernorm(params["ln_in"], x))
+    for i in range(4):
+        x = nn.conv2d_transpose(params[f"up{i}_t"], x, stride=2)
+        x = nn.leaky_relu(x)
+        x = nn.conv2d(params[f"up{i}_c"], x)
+        x = nn.leaky_relu(nn.layernorm(params[f"up{i}_ln"], x))
+    return nn.conv2d(params["out"], x)
+
+
+def l1_loss(params, cfg: SurrogateConfig, cond, target):
+    """Paper Eq. 1: sum over samples of ||f~(x) - f(x)||_1 (mean-reduced)."""
+    pred = apply_surrogate(params, cfg, cond)
+    return jnp.mean(jnp.abs(pred - target))
+
+
+@dataclasses.dataclass
+class FieldNormalizer:
+    """Per-field affine normalization fitted on the training split."""
+    mean: jnp.ndarray   # (6,)
+    std: jnp.ndarray    # (6,)
+
+    @classmethod
+    def fit(cls, fields) -> "FieldNormalizer":
+        import numpy as np
+        m = np.asarray(fields).reshape(-1, fields.shape[-1])
+        return cls(mean=jnp.asarray(m.mean(0)), std=jnp.asarray(m.std(0) + 1e-6))
+
+    def normalize(self, f):
+        return (f - self.mean) / self.std
+
+    def denormalize(self, f):
+        return f * self.std + self.mean
+
+
+def make_conditions(param_vecs, nsnaps: int):
+    """(N, PARAM_DIM) params -> (N*T, PARAM_DIM+1) per-timestep conditions."""
+    import numpy as np
+    n = param_vecs.shape[0]
+    t = np.linspace(0.0, 1.0, nsnaps, dtype=np.float32)
+    cond = np.concatenate([
+        np.repeat(param_vecs, nsnaps, axis=0),
+        np.tile(t, n)[:, None],
+    ], axis=1)
+    return cond

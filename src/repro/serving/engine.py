@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill + step-decode over a fixed-slot batch.
+
+Production shape of the loop (slot recycling = continuous batching) with the
+jitted prefill/serve_step pair from repro.models.lm.  The dry-run lowers the
+same step functions on the production mesh; this engine runs them for real
+on whatever devices exist (CPU smoke / TPU pod).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (P,) int32
+    max_new_tokens: int = 16
+    output: Optional[np.ndarray] = None
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, batch_slots: int = 4,
+                 max_seq: int = 128):
+        self.params, self.cfg = params, cfg
+        self.batch, self.max_seq = batch_slots, max_seq
+        self._step = jax.jit(
+            lambda p, c, t, pos: lm.serve_step(p, cfg, c, t, pos))
+        self._prefill = jax.jit(
+            lambda p, b: lm.lm_prefill(p, cfg, b, max_seq,
+                                       cache_dtype=jnp.float32))
+        self.stats = {"tokens": 0, "seconds": 0.0}
+
+    def run(self, requests: List[Request], greedy: bool = True):
+        """Serve requests in slot batches; returns completed requests."""
+        done: List[Request] = []
+        for i in range(0, len(requests), self.batch):
+            chunk = requests[i:i + self.batch]
+            while len(chunk) < self.batch:          # pad slots
+                chunk.append(Request(prompt=chunk[0].prompt, max_new_tokens=0))
+            plen = max(len(r.prompt) for r in chunk)
+            toks = np.zeros((self.batch, plen), np.int32)
+            for j, r in enumerate(chunk):
+                toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
+            t0 = time.time()
+            logits, cache = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(toks)})
+            outs = [[] for _ in chunk]
+            cur = jnp.argmax(logits, -1).astype(jnp.int32) if greedy else None
+            steps = max(r.max_new_tokens for r in chunk)
+            for s in range(steps):
+                for j in range(len(chunk)):
+                    outs[j].append(int(cur[j]))
+                logits, cache = self._step(self.params, cache, cur,
+                                           jnp.int32(plen + s))
+                cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            self.stats["seconds"] += time.time() - t0
+            self.stats["tokens"] += steps * len(chunk)
+            for j, r in enumerate(chunk):
+                if r.max_new_tokens:
+                    r.output = np.asarray(outs[j][: r.max_new_tokens])
+                    done.append(r)
+        return done
+
+    @property
+    def tokens_per_second(self) -> float:
+        return self.stats["tokens"] / max(self.stats["seconds"], 1e-9)

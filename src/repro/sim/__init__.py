@@ -1,0 +1,16 @@
+"""Simulation substrate: miniature Rayleigh-Taylor / PCHIP-perturbed ensembles.
+
+A real 2D Boussinesq vorticity-streamfunction spectral solver (JAX, jitted,
+scan-stepped) generates the training ensembles: 51 snapshots x 6 fields
+(density, vx, vy, pressure, energy, material) per simulation, mirroring the
+paper's Table I datasets at container scale.
+"""
+from repro.sim.solver import SimParams, run_simulation, FIELD_NAMES
+from repro.sim.ensemble import (
+    EnsembleSpec, RT_SPEC, PCHIP_SPEC, generate_ensemble, sample_params,
+)
+
+__all__ = [
+    "SimParams", "run_simulation", "FIELD_NAMES",
+    "EnsembleSpec", "RT_SPEC", "PCHIP_SPEC", "generate_ensemble", "sample_params",
+]

@@ -1,0 +1,200 @@
+"""2D Boussinesq vorticity-streamfunction spectral solver for RT/RM ensembles.
+
+Periodic pseudo-spectral formulation (rfft2), 2/3 dealiasing, SSP-RK3 time
+stepping, jitted with a lax.scan over steps.  A heavy band sits mid-domain;
+with gravity -y its lower interface is RT-unstable.  The interface
+perturbation eta(x) is either sinusoidal modes (RT ensemble) or a PCHIP
+(piecewise cubic Hermite) curve through random control points (PCHIP/RM-like
+ensemble, with an impulsive gravity pulse approximating Richtmyer's model).
+
+Outputs the paper's six fields per snapshot: density, vx, vy, pressure,
+energy, material -- (T, H, W, 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FIELD_NAMES = ("density", "velocity_x", "velocity_y", "pressure", "energy", "material")
+GAMMA = 5.0 / 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    """Ensemble input parameters (the surrogate model's conditioning vector)."""
+    atwood: float = 0.5          # (rho2-rho1)/(rho2+rho1)
+    amplitude: float = 0.02      # interface perturbation amplitude (fraction of Lx)
+    mode: float = 3.0            # dominant perturbation wavenumber (RT)
+    diffusivity: float = 2e-4    # nu = kappa
+    # PCHIP variant: control-point seed + impulse strength
+    pchip_seed: int = 0
+    impulse: float = 0.0         # >0: RM-like impulsive acceleration at t=0
+
+    def as_vector(self) -> np.ndarray:
+        return np.array([self.atwood, self.amplitude, self.mode,
+                         np.log10(self.diffusivity), float(self.pchip_seed % 97) / 97.0,
+                         self.impulse], dtype=np.float32)
+
+PARAM_DIM = 6
+
+
+def _pchip_interface(seed: int, nx: int, amplitude: float) -> np.ndarray:
+    """PCHIP curve through random control points -> periodic eta(x)."""
+    rng = np.random.default_rng(seed)
+    ncp = 6
+    xs = np.linspace(0.0, 1.0, ncp + 1)
+    ys = rng.uniform(-1.0, 1.0, ncp + 1)
+    ys[-1] = ys[0]                                # periodic
+    # monotone-cubic (Fritsch-Carlson) Hermite slopes
+    h = np.diff(xs)
+    d = np.diff(ys) / h
+    m = np.zeros(ncp + 1)
+    m[1:-1] = np.where(np.sign(d[:-1]) * np.sign(d[1:]) > 0,
+                       2.0 / (1.0 / np.where(d[:-1] == 0, 1, d[:-1]) +
+                              1.0 / np.where(d[1:] == 0, 1, d[1:])), 0.0)
+    m[0] = m[-1] = 0.5 * (d[0] + d[-1])
+    x = np.linspace(0.0, 1.0, nx, endpoint=False)
+    idx = np.clip(np.searchsorted(xs, x, side="right") - 1, 0, ncp - 1)
+    t = (x - xs[idx]) / h[idx]
+    h00 = 2 * t**3 - 3 * t**2 + 1
+    h10 = t**3 - 2 * t**2 + t
+    h01 = -2 * t**3 + 3 * t**2
+    h11 = t**3 - t**2
+    eta = (h00 * ys[idx] + h10 * h[idx] * m[idx]
+           + h01 * ys[idx + 1] + h11 * h[idx] * m[idx + 1])
+    eta -= eta.mean()
+    return (amplitude * eta).astype(np.float32)
+
+
+def _initial_fields(p: SimParams, ny: int, nx: int, lx: float, ly: float):
+    """Initial (rho, omega) on the grid; heavy band mid-domain."""
+    x = np.linspace(0.0, lx, nx, endpoint=False)
+    y = np.linspace(0.0, ly, ny, endpoint=False)
+    xx = x[None, :]
+    yy = y[:, None]
+    rho1 = 1.0
+    rho2 = rho1 * (1 + p.atwood) / (1 - p.atwood)
+    delta = 0.02 * ly
+    y_lo, y_hi = 0.35 * ly, 0.8 * ly
+    if p.impulse > 0 or p.pchip_seed:
+        eta = _pchip_interface(p.pchip_seed, nx, p.amplitude * lx)[None, :]
+    else:
+        k = 2 * np.pi * p.mode / lx
+        eta = (p.amplitude * lx * (np.cos(k * xx)
+               + 0.3 * np.cos(2 * k * xx + 1.1) + 0.2 * np.cos(3 * k * xx + 2.3)))
+    band = 0.5 * (np.tanh((yy - (y_lo + eta)) / delta)
+                  - np.tanh((yy - y_hi) / delta))
+    rho = rho1 + (rho2 - rho1) * band
+    omega = np.zeros_like(rho)
+    return (jnp.asarray(rho, jnp.float32), jnp.asarray(omega, jnp.float32),
+            rho1, rho2)
+
+
+@partial(jax.jit, static_argnames=("ny", "nx", "nsteps", "nsnaps"))
+def _integrate(rho0, omega0, g_t, nu, rho0_mean, ny: int, nx: int,
+               lx: float, ly: float, dt: float, nsteps: int, nsnaps: int):
+    """SSP-RK3 pseudo-spectral integration; returns (nsnaps, ny, nx, 6)."""
+    kx = jnp.fft.rfftfreq(nx, d=lx / nx) * 2 * jnp.pi      # (nx//2+1,)
+    ky = jnp.fft.fftfreq(ny, d=ly / ny) * 2 * jnp.pi       # (ny,)
+    kxg = kx[None, :]
+    kyg = ky[:, None]
+    k2 = kxg**2 + kyg**2
+    inv_k2 = jnp.where(k2 > 0, 1.0 / jnp.maximum(k2, 1e-12), 0.0)
+    # 2/3 dealiasing mask
+    mask = ((jnp.abs(kxg) <= (2 / 3) * jnp.max(jnp.abs(kx))) &
+            (jnp.abs(kyg) <= (2 / 3) * jnp.max(jnp.abs(ky)))).astype(jnp.float32)
+
+    def to_hat(f):
+        return jnp.fft.rfft2(f)
+
+    def to_grid(fh):
+        return jnp.fft.irfft2(fh, s=(ny, nx))
+
+    def velocity(omega_h):
+        psi_h = omega_h * inv_k2                    # psi: lap psi = -omega
+        u = to_grid(1j * kyg * psi_h)               # u = d psi / dy
+        v = to_grid(-1j * kxg * psi_h)              # v = -d psi / dx
+        return u, v
+
+    def rhs(omega_h, rho_h, g):
+        u, v = velocity(omega_h)
+        om = to_grid(omega_h)
+        rh = to_grid(rho_h)
+        adv_om = to_hat(u * to_grid(1j * kxg * omega_h) + v * to_grid(1j * kyg * omega_h))
+        adv_rh = to_hat(u * to_grid(1j * kxg * rho_h) + v * to_grid(1j * kyg * rho_h))
+        buoy = -(g / rho0_mean) * 1j * kxg * rho_h   # -g/rho0 * d rho/dx
+        d_om = (-adv_om + buoy - nu * k2 * omega_h) * mask
+        d_rh = (-adv_rh - nu * k2 * rho_h) * mask
+        return d_om, d_rh
+
+    def rk3_step(state, g):
+        omega_h, rho_h = state
+        d1o, d1r = rhs(omega_h, rho_h, g)
+        o1 = omega_h + dt * d1o
+        r1 = rho_h + dt * d1r
+        d2o, d2r = rhs(o1, r1, g)
+        o2 = 0.75 * omega_h + 0.25 * (o1 + dt * d2o)
+        r2 = 0.75 * rho_h + 0.25 * (r1 + dt * d2r)
+        d3o, d3r = rhs(o2, r2, g)
+        o3 = omega_h / 3 + 2 / 3 * (o2 + dt * d3o)
+        r3 = rho_h / 3 + 2 / 3 * (r2 + dt * d3r)
+        return (o3, r3)
+
+    def snapshot(omega_h, rho_h, g):
+        u, v = velocity(omega_h)
+        rho = to_grid(rho_h)
+        # pressure Poisson: lap p = 2 rho0 (u_x v_y - u_y v_x) - g d rho/dy
+        ux = to_grid(1j * kxg * to_hat(u))
+        uy = to_grid(1j * kyg * to_hat(u))
+        vx = to_grid(1j * kxg * to_hat(v))
+        vy = to_grid(1j * kyg * to_hat(v))
+        rhs_p = to_hat(2 * rho0_mean * (ux * vy - uy * vx)) - g * 1j * kyg * rho_h
+        p = to_grid(-rhs_p * inv_k2)
+        rho_safe = jnp.maximum(rho, 0.05)
+        energy = p / ((GAMMA - 1) * rho_safe) + 0.5 * (u * u + v * v)
+        material = rho                                # normalized downstream
+        return jnp.stack([rho, u, v, p, energy, material], axis=-1)
+
+    steps_per_snap = nsteps // (nsnaps - 1)
+
+    def outer(state, g):
+        def inner(s, _):
+            return rk3_step(s, g), None
+        state, _ = jax.lax.scan(inner, state, None, length=steps_per_snap)
+        omega_h, rho_h = state
+        return state, snapshot(omega_h, rho_h, g)
+
+    state0 = (to_hat(omega0), to_hat(rho0))
+    snap0 = snapshot(state0[0], state0[1], g_t[0])
+    state, snaps = jax.lax.scan(outer, state0, g_t[1:nsnaps])
+    return jnp.concatenate([snap0[None], snaps], axis=0)
+
+
+def run_simulation(params: SimParams, ny: int = 96, nx: int = 32,
+                   nsteps: int = 2000, nsnaps: int = 51,
+                   lx: float = 1.0, ly: float = 3.0,
+                   dt: float = 1.5e-3, g: float = 4.0) -> jnp.ndarray:
+    """Run one simulation; returns (nsnaps, ny, nx, 6) float32.
+
+    ``params.impulse > 0`` switches to RM-like impulsive forcing: a strong
+    gravity pulse for the first snapshot interval, then g ~ 0 (coasting),
+    approximating shock-driven Richtmyer-Meshkov growth.
+    """
+    rho, omega, rho1, rho2 = _initial_fields(params, ny, nx, lx, ly)
+    rho0_mean = 0.5 * (rho1 + rho2)
+    if params.impulse > 0:
+        g_t = np.full((nsnaps,), 0.05 * g, np.float32)
+        g_t[:3] = g * (1.0 + params.impulse)
+    else:
+        g_t = np.full((nsnaps,), g, np.float32)
+    # material normalization bounds are recomputed downstream from rho1/rho2
+    fields = _integrate(rho, omega, jnp.asarray(g_t), params.diffusivity,
+                        rho0_mean, ny, nx, lx, ly, dt, nsteps, nsnaps)
+    # normalize material to [0,1]
+    mat = jnp.clip((fields[..., 5] - rho1) / (rho2 - rho1), 0.0, 1.0)
+    return fields.at[..., 5].set(mat)

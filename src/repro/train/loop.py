@@ -1,0 +1,112 @@
+"""Surrogate training loop: shuffled epochs, jitted steps, checkpoint/restart.
+
+The data source is either raw in-memory fields or a CompressedArrayStore
+(online per-batch decompression -- the paper's workflow 2).  The loop
+checkpoints model + optimizer + data-pipeline state (epoch, step, shuffle
+seed) so a preempted run resumes exactly, and auto-resumes from the newest
+complete checkpoint on restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.surrogate import SurrogateConfig, apply_surrogate, init_surrogate, l1_loss
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamConfig, adam_init, adam_update
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    epochs: int = 40
+    batch_size: int = 64
+    lr: float = 1e-4
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every_steps: int = 200
+    lossy_ckpt_bits: Optional[int] = None
+    log_every: int = 50
+
+
+@partial(jax.jit, static_argnames=("cfg", "opt_cfg"))
+def _train_step(params, opt_state, cond, target, cfg: SurrogateConfig,
+                opt_cfg: AdamConfig):
+    loss, grads = jax.value_and_grad(l1_loss)(params, cfg, cond, target)
+    params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
+    return params, opt_state, loss
+
+
+def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
+                    conditions: np.ndarray, get_batch_targets: Callable,
+                    num_samples: int, params=None, hooks=None):
+    """Train; ``get_batch_targets(idx) -> (B, H, W, F)`` normalized targets.
+
+    The target indirection is the compression seam: raw training passes a
+    slice of the in-memory array; compressed training passes the store's
+    jitted decode.  Returns (params, loss_history).
+    """
+    opt_cfg = AdamConfig(lr=train_cfg.lr)
+    key = jax.random.PRNGKey(train_cfg.seed)
+    if params is None:
+        params = init_surrogate(key, model_cfg)
+    opt_state = adam_init(params, opt_cfg)
+
+    start_epoch, start_step = 0, 0
+    rng = np.random.default_rng(train_cfg.seed + 1)
+    if train_cfg.ckpt_dir:
+        latest = ckpt.latest_checkpoint(train_cfg.ckpt_dir)
+        if latest:
+            state, meta = ckpt.restore_checkpoint(
+                latest, {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start_epoch = meta["extra"].get("epoch", 0)
+            start_step = meta["step"]
+            rng = np.random.default_rng(meta["extra"].get("rng_seed",
+                                                          train_cfg.seed + 1))
+
+    conditions = jnp.asarray(conditions)
+    bs = train_cfg.batch_size
+    losses = []
+    step = start_step
+    for epoch in range(start_epoch, train_cfg.epochs):
+        order = rng.permutation(num_samples)
+        for i in range(0, num_samples - bs + 1, bs):
+            idx = order[i:i + bs]
+            cond = conditions[idx]
+            target = get_batch_targets(idx)
+            params, opt_state, loss = _train_step(
+                params, opt_state, cond, target, model_cfg, opt_cfg)
+            step += 1
+            if step % train_cfg.log_every == 0:
+                losses.append((step, float(loss)))
+            if hooks:
+                for h in hooks:
+                    h(step, params, float(loss))
+            if (train_cfg.ckpt_dir and step % train_cfg.ckpt_every_steps == 0):
+                ckpt.save_checkpoint(
+                    train_cfg.ckpt_dir, step,
+                    {"params": params, "opt": opt_state},
+                    extra={"epoch": epoch, "rng_seed": train_cfg.seed + 1 + epoch},
+                    lossy_bits=train_cfg.lossy_ckpt_bits)
+    if train_cfg.ckpt_dir:
+        ckpt.save_checkpoint(train_cfg.ckpt_dir, step,
+                             {"params": params, "opt": opt_state},
+                             extra={"epoch": train_cfg.epochs},
+                             lossy_bits=train_cfg.lossy_ckpt_bits)
+    return params, losses
+
+
+def predict_fields(params, model_cfg: SurrogateConfig, conditions,
+                   batch: int = 256) -> np.ndarray:
+    outs = []
+    conditions = np.asarray(conditions)
+    fn = jax.jit(lambda p, c: apply_surrogate(p, model_cfg, c))
+    for i in range(0, len(conditions), batch):
+        outs.append(np.asarray(fn(params, jnp.asarray(conditions[i:i + batch]))))
+    return np.concatenate(outs)

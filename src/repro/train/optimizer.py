@@ -1,0 +1,72 @@
+"""Adam / AdamW built from scratch on pytrees (no optax in this container)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: object          # pytree like params
+    v: object
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = None
+    # ZeRO-1: when set, moment tensors carry this sharding (dry-run/production)
+    moment_sharding: object = None
+
+
+def adam_init(params, cfg: AdamConfig) -> AdamState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     m=jax.tree.map(zeros, params),
+                     v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adam_update(grads, state: AdamState, params, cfg: AdamConfig,
+                lr_scale: jnp.ndarray | float = 1.0):
+    """Returns (new_params, new_state). Pure; jit-safe."""
+    if cfg.grad_clip is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g), state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, mm, vv):
+        mhat = mm / bc1
+        vhat = vv / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p
+        return (p - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamState(step=step, m=m, v=v)
+
+
+def cosine_lr_scale(step, warmup: int, total: int, min_frac: float = 0.1):
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

@@ -1,0 +1,34 @@
+import numpy as np
+import pytest
+
+# NOTE: XLA_FLAGS / device-count tricks are deliberately NOT set here --
+# smoke tests and benches must see 1 real device.  Importing jax and
+# touching devices() locks the backend to 1 device BEFORE any test imports
+# repro.launch.dryrun (whose module header sets the 512-placeholder flag for
+# standalone runs; once jax is initialized that flag is inert).
+import jax
+
+jax.devices()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def smooth_field(rng):
+    """A smooth 2D field resembling simulation output."""
+    t = np.linspace(0, 1, 64)
+    xx, yy = np.meshgrid(t, t)
+    return (np.sin(6 * xx + 2 * yy) + 0.3 * np.cos(14 * yy * xx)
+            + 0.05 * rng.standard_normal((64, 64))).astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def tiny_ensemble():
+    """Session-cached miniature RT ensemble (2 sims, small grid)."""
+    import dataclasses
+    from repro.sim import RT_SPEC, generate_ensemble
+    spec = dataclasses.replace(RT_SPEC, ny=48, nx=16, nsteps=400)
+    return generate_ensemble(spec, num_sims=2, seed=0)

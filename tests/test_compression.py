@@ -1,0 +1,109 @@
+"""Codec correctness: round trips, error bounds (property-based), ratios."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compression import (
+    compressed_nbytes, compression_ratio, decode, decode_fixed_rate,
+    encode_fixed_accuracy, encode_fixed_rate, blockify, deblockify,
+)
+from repro.compression import transform as T
+
+
+# ---------------------------------------------------------------------------
+# transform invariants
+# ---------------------------------------------------------------------------
+
+def test_blockify_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((3, 8, 12)).astype(np.float32))
+    b = blockify(x)
+    assert b.shape == (3 * 2 * 3, 16)
+    assert np.allclose(deblockify(b, (3, 8, 12)), x)
+
+
+def test_negabinary_roundtrip(rng):
+    i = jnp.asarray(rng.integers(-2**29, 2**29, 100000).astype(np.int32))
+    assert np.array_equal(T.nb2int(T.int2nb(i)), i)
+
+
+def test_lift_near_inverse(rng):
+    """ZFP lift pair is a near-inverse: integer shifts round a few ulps."""
+    b = jnp.asarray(rng.integers(-2**26, 2**26, (5000, 16)).astype(np.int32))
+    r = T.inv_transform_2d(T.fwd_transform_2d(b))
+    assert int(jnp.max(jnp.abs(r - b))) <= 16     # ulps at Q=26 scale
+
+
+def test_transform_range_contraction(rng):
+    b = jnp.asarray(rng.integers(-2**27, 2**27, (5000, 16)).astype(np.int32))
+    f = T.fwd_transform_2d(b)
+    assert int(jnp.max(jnp.abs(f))) < 2**28       # no overflow headroom used
+
+
+# ---------------------------------------------------------------------------
+# error-bounded mode (the paper's guarantee)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tol", [1e-1, 1e-2, 1e-3, 1e-4])
+def test_fixed_accuracy_bound(smooth_field, tol):
+    cf = encode_fixed_accuracy(jnp.asarray(smooth_field), tol)
+    err = np.abs(np.asarray(decode(cf)) - smooth_field).max()
+    assert err <= tol, f"L-inf bound violated: {err} > {tol}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       scale=st.floats(1e-3, 1e3),
+       tol_frac=st.floats(1e-4, 0.5))
+def test_fixed_accuracy_bound_property(seed, scale, tol_frac):
+    """Property: for any finite field and tolerance, the bound holds."""
+    r = np.random.default_rng(seed)
+    x = (r.standard_normal((24, 20)) * scale).astype(np.float32)
+    tol = float(tol_frac * scale)
+    cf = encode_fixed_accuracy(jnp.asarray(x), tol)
+    err = np.abs(np.asarray(decode(cf)) - x).max()
+    assert err <= tol * (1 + 1e-6)
+
+
+def test_zero_field():
+    x = jnp.zeros((16, 16), jnp.float32)
+    cf = encode_fixed_accuracy(x, 1e-3)
+    assert np.allclose(np.asarray(decode(cf)), 0.0)
+    assert float(compression_ratio(cf)) > 30      # near header-only
+
+
+def test_ratio_monotone_in_tolerance(smooth_field):
+    x = jnp.asarray(smooth_field)
+    ratios = [float(compression_ratio(encode_fixed_accuracy(x, t)))
+              for t in (1e-4, 1e-3, 1e-2, 1e-1)]
+    assert ratios == sorted(ratios), f"ratio not monotone: {ratios}"
+
+
+# ---------------------------------------------------------------------------
+# fixed-rate mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 6, 10, 16, 24, 30])
+def test_fixed_rate_roundtrip_quality(smooth_field, bits):
+    x = jnp.asarray(smooth_field)
+    cf = encode_fixed_rate(x, bits)
+    err = np.abs(np.asarray(decode_fixed_rate(cf)) - smooth_field).max()
+    # each extra plane halves the error; anchor loosely (floor = lift
+    # round-trip noise at full precision)
+    assert err < 6.0 * 2.0 ** (-bits + 3) + 1e-7
+    assert cf.payload.shape[1] == (bits + 1) // 2
+
+
+def test_odd_shapes_and_leading_dims(rng):
+    x = jnp.asarray(rng.standard_normal((2, 3, 13, 19)).astype(np.float32))
+    cf = encode_fixed_accuracy(x, 1e-3)
+    out = np.asarray(decode(cf))
+    assert out.shape == (2, 3, 13, 19)
+    assert np.abs(out - np.asarray(x)).max() <= 1e-3
+
+
+def test_nbytes_accounting(smooth_field):
+    cf = encode_fixed_accuracy(jnp.asarray(smooth_field), 1e-2)
+    nb = cf.nplanes.shape[0]
+    expected = 2 * nb + 2 * int(jnp.sum(cf.nplanes))
+    assert int(compressed_nbytes(cf)) == expected

@@ -1,0 +1,156 @@
+"""Paper core: Algorithm 1, variability bands, pipeline, grad compression."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (CompressedArrayStore, RawArrayStore, VariabilityBand,
+                        band_contains, compute_band, find_tolerance)
+from repro.core.grad_compress import compress_decompress
+from repro.metrics import (mixing_layer_thickness, psnr, timeseries_correlation,
+                           total_mass, total_momentum)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+def test_tolerance_search_respects_model_error(smooth_field):
+    e = 0.02
+    res = find_tolerance(smooth_field, e)
+    assert res.compression_l1 <= e
+    assert res.ratio > 1.0
+    assert res.iterations <= 8
+
+
+def test_tolerance_monotone_in_model_error(smooth_field):
+    r_small = find_tolerance(smooth_field, 0.001)
+    r_big = find_tolerance(smooth_field, 0.1)
+    assert r_big.tolerance >= r_small.tolerance
+    assert r_big.ratio >= r_small.ratio
+
+
+def test_tolerance_initial_guess_formula(smooth_field):
+    """Algorithm 1 starts at t0 = 4^d e / c(d) and self-corrects in either
+    direction; the invariant is compression_L1 <= e at the accepted t."""
+    e = 0.01
+    res = find_tolerance(smooth_field, e)
+    assert res.compression_l1 <= e
+    assert res.tolerance > 0 and res.iterations <= 8
+
+
+# ---------------------------------------------------------------------------
+# variability bands
+# ---------------------------------------------------------------------------
+
+def test_band_basic():
+    trajs = [np.sin(np.linspace(0, 3, 40)) + 0.05 * np.random.default_rng(s).standard_normal(40)
+             for s in range(8)]
+    band = compute_band(trajs)
+    ok, frac = band_contains(band, trajs[0])
+    assert ok
+    bad = trajs[0] + 1.0
+    ok2, frac2 = band_contains(band, bad)
+    assert not ok2 and frac2 < 0.2
+
+
+def test_band_width_grows_with_noise():
+    r = np.random.default_rng(0)
+    small = compute_band([0.01 * r.standard_normal(20) for _ in range(10)])
+    large = compute_band([1.00 * r.standard_normal(20) for _ in range(10)])
+    assert large.std.mean() > small.std.mean() * 10
+
+
+# ---------------------------------------------------------------------------
+# data pipeline stores
+# ---------------------------------------------------------------------------
+
+def test_compressed_store_roundtrip(rng, tmp_path):
+    samples = [rng.standard_normal((4, 24, 16)).astype(np.float32)
+               for _ in range(10)]
+    store = CompressedArrayStore(samples, tolerances=[0.05] * 10,
+                                 root=str(tmp_path / "cs"))
+    batch = store.get_batch(np.array([1, 3, 7]))
+    assert batch.shape == (3, 4, 24, 16)
+    err = float(jnp.max(jnp.abs(batch - jnp.asarray(np.stack([samples[i] for i in (1, 3, 7)])))))
+    assert err <= 0.05
+    assert store.ratio > 1.0
+    assert store.stats.bytes_read > 0
+
+
+def test_raw_store_disk_roundtrip(rng, tmp_path):
+    samples = [rng.standard_normal((2, 8, 8)).astype(np.float32) for _ in range(4)]
+    store = RawArrayStore(samples, root=str(tmp_path / "raw"))
+    batch = store.get_batch(np.array([0, 2]))
+    assert np.allclose(batch, np.stack([samples[0], samples[2]]))
+    assert store.stored_bytes == 4 * 2 * 8 * 8 * 4
+
+
+def test_compressed_store_beats_raw_storage(smooth_field):
+    samples = [smooth_field[None] for _ in range(6)]
+    store = CompressedArrayStore(samples, tolerances=[0.02] * 6)
+    assert store.stored_bytes < RawArrayStore(samples).stored_bytes / 2
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (error feedback invariant)
+# ---------------------------------------------------------------------------
+
+def test_grad_compress_roundtrip_error_bounded(rng):
+    g = jnp.asarray(rng.standard_normal((128, 256)).astype(np.float32) * 1e-3)
+    for bits in (8, 16, 24):
+        g_hat = compress_decompress(g, bits)
+        rel = float(jnp.max(jnp.abs(g_hat - g)) / jnp.max(jnp.abs(g)))
+        assert rel < 2.0 ** (-bits + 6)
+
+
+def test_grad_compress_shapes(rng):
+    for shape in [(100,), (33, 7), (4, 5, 6)]:
+        g = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+        assert compress_decompress(g, 16).shape == g.shape
+
+
+# ---------------------------------------------------------------------------
+# physics metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_on_synthetic_fields():
+    h, w = 32, 16
+    fields = np.zeros((h, w, 6), np.float32)
+    fields[..., 0] = 2.0                       # uniform density
+    fields[..., 1] = 1.0                       # vx
+    fields[..., 2] = -0.5                      # vy
+    f = jnp.asarray(fields)
+    assert float(total_mass(f)) == pytest.approx(2.0 * h * w)
+    px, py = np.asarray(total_momentum(f))
+    assert px == pytest.approx(2.0 * h * w * 1.0)
+    assert py == pytest.approx(2.0 * h * w * -0.5)
+
+
+def test_mixing_layer_thickness_limits():
+    h, w = 64, 8
+    rho1, rho2 = 1.0, 3.0
+    # perfectly separated: h(t) ~ 0
+    sep = np.ones((h, w, 6), np.float32)
+    sep[: h // 2, :, 0] = rho1
+    sep[h // 2:, :, 0] = rho2
+    val_sep = float(mixing_layer_thickness(jnp.asarray(sep), rho1, rho2))
+    # fully mixed: h(t) = H
+    mix = np.ones((h, w, 6), np.float32)
+    mix[..., 0] = 0.5 * (rho1 + rho2)
+    val_mix = float(mixing_layer_thickness(jnp.asarray(mix), rho1, rho2))
+    assert val_sep == pytest.approx(0.0, abs=1e-3)
+    assert val_mix == pytest.approx(h, rel=1e-6)
+
+
+def test_psnr_identity_and_noise(smooth_field):
+    x = jnp.asarray(smooth_field)
+    assert float(psnr(x, x)) > 100
+    noisy = x + 0.1 * jnp.std(x)
+    assert 5 < float(psnr(x, noisy)) < 40
+
+
+def test_timeseries_correlation():
+    t = np.linspace(0, 5, 50)
+    a = jnp.asarray(np.sin(t))
+    assert float(timeseries_correlation(a, a)) == pytest.approx(1.0)
+    assert float(timeseries_correlation(a, -a)) == pytest.approx(-1.0)

@@ -1,0 +1,97 @@
+"""Data-loader semantics (sharding, resume, prefetch) + serving engine."""
+import numpy as np
+import jax
+import pytest
+
+from repro.data import PrefetchLoader, ShardedLoader
+
+
+def test_sharded_loader_covers_epoch_exactly():
+    ld = ShardedLoader(num_samples=100, batch_size=10, seed=3)
+    batches = ld.take(10)
+    seen = np.concatenate(batches)
+    assert sorted(seen.tolist()) == list(range(100))
+
+
+def test_sharded_loader_epochs_reshuffle():
+    ld = ShardedLoader(num_samples=64, batch_size=64, seed=1)
+    e0, e1 = ld.take(2)
+    assert not np.array_equal(e0, e1)
+    assert sorted(e0.tolist()) == sorted(e1.tolist())
+
+
+def test_host_sharding_partitions():
+    n, hosts = 96, 4
+    shards = [np.concatenate(ShardedLoader(n, 8, seed=7, host_id=h,
+                                           num_hosts=hosts).take(3))
+              for h in range(hosts)]
+    allidx = np.concatenate(shards)
+    assert len(allidx) == n and len(set(allidx.tolist())) == n
+
+
+def test_loader_resume_mid_epoch():
+    """Fault tolerance: state round-trips through a (simulated) checkpoint."""
+    a = ShardedLoader(50, 10, seed=5)
+    it = iter(a)
+    first_three = [next(it) for _ in range(3)]
+    state = a.state()
+    rest_a = [next(it) for _ in range(2)]
+    b = ShardedLoader(50, 10, seed=0)
+    b.restore(state)
+    rest_b = [next(iter(b)) for _ in range(2)]
+    for x, y in zip(rest_a, rest_b):
+        assert np.array_equal(x, y)
+
+
+def test_prefetch_loader_order_and_backpressure():
+    ld = ShardedLoader(40, 8, seed=2)
+    direct = ld.take(5)
+    ld2 = ShardedLoader(40, 8, seed=2)
+    pf = PrefetchLoader(iter(ld2), fetch=lambda idx: idx * 2, depth=2)
+    got = [next(pf) for _ in range(5)]
+    pf.close()
+    for d, g in zip(direct, got):
+        assert np.array_equal(d * 2, g)
+
+
+def test_prefetch_loader_propagates_errors():
+    def boom(_):
+        raise RuntimeError("fetch failed")
+    pf = PrefetchLoader(iter(ShardedLoader(8, 4)), fetch=boom)
+    with pytest.raises(RuntimeError):
+        next(pf)
+
+
+def test_serving_engine_roundtrip():
+    from repro.configs import reduced_config
+    from repro.models import lm
+    from repro.serving import ServeEngine
+    from repro.serving.engine import Request
+    cfg = reduced_config("internlm2-1.8b")
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, batch_slots=2, max_seq=32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                    max_new_tokens=4) for _ in range(3)]
+    done = engine.run(reqs)
+    assert len(done) == 3
+    for r in done:
+        assert r.output.shape == (4,)
+        assert (0 <= r.output).all() and (r.output < cfg.vocab_size).all()
+    assert engine.tokens_per_second > 0
+
+
+def test_serving_greedy_deterministic():
+    from repro.configs import reduced_config
+    from repro.models import lm
+    from repro.serving import ServeEngine
+    from repro.serving.engine import Request
+    cfg = reduced_config("mamba2-130m")
+    params = lm.init_lm(jax.random.PRNGKey(1), cfg)
+    prompt = np.arange(1, 7, dtype=np.int32)
+    outs = []
+    for _ in range(2):
+        engine = ServeEngine(params, cfg, batch_slots=2, max_seq=24)
+        done = engine.run([Request(prompt=prompt, max_new_tokens=5)])
+        outs.append(done[0].output)
+    assert np.array_equal(outs[0], outs[1])

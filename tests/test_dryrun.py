@@ -1,0 +1,111 @@
+"""HLO analysis parser + sharding-rule unit tests (no 512-device meshes here:
+the dry-run itself owns that; these tests validate the machinery on the
+single real device)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_module
+from repro.distributed.sharding import resolve_specs, param_specs
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def test_parser_flops_exact_no_loop():
+    m, k, n = 256, 512, 128
+    comp = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
+    res = analyze(comp.as_text())
+    assert res["flops"] == pytest.approx(2 * m * k * n, rel=0.01)
+
+
+def test_parser_scales_scan_loops():
+    L, m, k = 12, 64, 64
+
+    def f(ws, x):
+        return jax.lax.scan(lambda h, w: (jnp.tanh(h @ w), None), x, ws)[0]
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((L, k, k), jnp.float32),
+        jax.ShapeDtypeStruct((m, k), jnp.float32)).compile()
+    res = analyze(comp.as_text())
+    assert res["flops"] == pytest.approx(L * 2 * m * k * k, rel=0.05)
+
+
+def test_parser_nested_scan():
+    L, inner, m, k = 6, 4, 32, 32
+
+    def f(ws, x):
+        def outer(h, w):
+            h2 = jax.lax.scan(lambda hh, _: (jnp.tanh(hh @ w), None), h,
+                              None, length=inner)[0]
+            return h2, None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((L, k, k), jnp.float32),
+        jax.ShapeDtypeStruct((m, k), jnp.float32)).compile()
+    res = analyze(comp.as_text())
+    assert res["flops"] == pytest.approx(L * inner * 2 * m * k * k, rel=0.05)
+
+
+def test_parse_module_structure():
+    comp = jax.jit(lambda x: jnp.sin(x) @ x.T).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    comps = parse_module(comp.as_text())
+    assert any("main" in n for n in comps)
+    ops = [i.opcode for c in comps.values() for i in c.instructions]
+    assert "dot" in ops
+
+
+# ---------------------------------------------------------------------------
+# sharding divisibility resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_drops_nondividing_axes():
+    # resolve_specs only reads axis names/sizes, so a fake suffices
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+    spec = {"w": P(None, "data", "model", None)}
+    shapes = {"w": jax.ShapeDtypeStruct((24, 2048, 8, 128), jnp.float32)}
+    out = resolve_specs(spec, shapes, FakeMesh())
+    assert out["w"] == P(None, "data", None, None)   # 8 % 16 != 0 -> dropped
+
+
+def test_param_specs_cover_all_leaves():
+    from repro.configs import reduced_config
+    from repro.models import lm
+    cfg = reduced_config("qwen3-moe-30b-a3b")
+    shapes = jax.eval_shape(lambda: lm.init_lm(jax.random.PRNGKey(0), cfg))
+    specs = param_specs(shapes)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    flat_p = jax.tree_util.tree_leaves(shapes)
+    assert len(flat_s) == len(flat_p)
+
+
+def test_input_specs_all_cells():
+    from repro.configs import ALL_ARCHS, SHAPE_CELLS, get_config, cell_applicable
+    from repro.launch.dryrun import input_specs
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for cell in SHAPE_CELLS:
+            if not cell_applicable(cfg, cell)[0]:
+                continue
+            spec = input_specs(cfg, cell)
+            assert "tokens" in spec
+            for v in spec.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_analytic_traffic_positive_all_cells():
+    from repro.configs import ALL_ARCHS, SHAPE_CELLS, get_config, cell_applicable
+    from repro.launch.dryrun import analytic_memory_traffic
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for cell in SHAPE_CELLS:
+            if not cell_applicable(cfg, cell)[0]:
+                continue
+            assert analytic_memory_traffic(cfg, cell, 256) > 0

@@ -1,0 +1,98 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.compression import transform as T
+from repro.kernels import ops, ref
+
+
+def _blocks_from(rng, n_blocks, kind="smooth"):
+    if kind == "smooth":
+        t = np.linspace(0, 3, n_blocks * 16)
+        x = np.sin(t) * np.exp(-0.1 * t)
+    else:
+        x = rng.standard_normal(n_blocks * 16) * 10.0 ** rng.integers(-3, 3)
+    return jnp.asarray(x.reshape(n_blocks, 16).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# ZFP codec kernels: bit-exact vs oracle across shapes and rates
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [1, 2, 5, 8, 15, 23, 30])
+@pytest.mark.parametrize("n_blocks", [1, 7, 256, 300])
+def test_zfp_encode_matches_ref(rng, bits, n_blocks):
+    blocks = _blocks_from(rng, n_blocks, "rough")
+    p_ref, e_ref = ref.zfp_encode_blocks_ref(blocks, bits)
+    p_k, e_k = ops.zfp_encode_blocks(blocks, bits)
+    assert np.array_equal(np.asarray(p_ref), np.asarray(p_k))
+    assert np.array_equal(np.asarray(e_ref), np.asarray(e_k))
+
+
+@pytest.mark.parametrize("bits", [2, 8, 16, 30])
+@pytest.mark.parametrize("n_blocks", [3, 256, 511])
+def test_zfp_decode_matches_ref(rng, bits, n_blocks):
+    blocks = _blocks_from(rng, n_blocks, "smooth")
+    payload, emax = ref.zfp_encode_blocks_ref(blocks, bits)
+    d_ref = ref.zfp_decode_blocks_ref(payload, emax, bits)
+    d_k = ops.zfp_decode_blocks(payload, emax, bits)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref),
+                               rtol=0, atol=0)
+
+
+def test_zfp_fast_path_identical(rng):
+    """The compiled-oracle throughput path must equal the kernel path."""
+    blocks = _blocks_from(rng, 64, "rough")
+    payload, emax = ops.zfp_encode_blocks(blocks, 12)
+    a = ops.zfp_decode_blocks(payload, emax, 12)
+    b = ops.zfp_decode_blocks_fast(payload, emax, 12)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_encode_decode_field_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((6, 33, 18)).astype(np.float32))
+    cf = ops.encode_field(x, 20)
+    out = ops.decode_field(cf)
+    assert out.shape == x.shape
+    assert float(jnp.max(jnp.abs(out - x))) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel vs oracle
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # b, hq, hkv, sq, sk, d, causal, window, dtype
+    (2, 4, 2, 64, 64, 32, True, None, jnp.float32),
+    (1, 8, 2, 1, 128, 64, True, None, jnp.float32),      # decode shape
+    (1, 4, 4, 96, 96, 16, False, None, jnp.float32),     # encoder (full)
+    (2, 2, 1, 128, 128, 32, True, 48, jnp.float32),      # sliding window
+    (1, 4, 2, 256, 256, 64, True, None, jnp.bfloat16),   # bf16
+    (1, 2, 2, 80, 80, 24, True, None, jnp.float32),      # pad-needing shape
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_attention_matches_ref(rng, case):
+    b, hq, hkv, sq, sk, d, causal, window, dtype = case
+    q = jnp.asarray(rng.standard_normal((b, hq, sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, sk, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, sk, d)), dtype)
+    o_ref = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    o_k = ops.flash_attention(q, k, v, causal=causal, window=window)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_ref, np.float32), atol=atol)
+
+
+def test_flash_attention_small_blocks(rng):
+    """Block sizes smaller than defaults exercise the online-softmax carry."""
+    from repro.kernels.flash_attention import flash_attention
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 16)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 2, 64, 16)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 2, 64, 16)).astype(np.float32))
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True)
+    o_k = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref), atol=2e-5)
