@@ -10,7 +10,7 @@ import time
 import numpy as np
 
 from benchmarks.common import build_study
-from repro.core import algorithm1_per_sample
+from repro.core import algorithm1_per_sample, find_tolerance_batch
 
 
 def run():
@@ -24,12 +24,30 @@ def run():
     iters = [r.iterations for r in results]
     ratios = [r.ratio for r in results]
     margins = [r.compression_l1 / r.model_l1 for r in results]
+
+    # batched Algorithm 1: the whole stack searches inside ONE jitted
+    # lax.while_loop (first call pays the compile; the second is the
+    # steady-state dispatch cost)
+    batch = np.stack([np.transpose(test[i % len(test)], (2, 0, 1))
+                      for i in range(32)])
+    errs = [e] * len(batch)
+    find_tolerance_batch(batch, errs)              # compile
+    t0 = time.time()
+    br = find_tolerance_batch(batch, errs)
+    dt_batch = (time.time() - t0) * 1e6 / len(batch)
+    # batch[i] == test[i], so batch results at even i align with `results`
+    off_by = np.abs(np.log2(np.asarray(
+        [br.tolerance[i] / results[j].tolerance
+         for j, i in enumerate(range(0, 32, 2))])))
     return [
         ("alg1/iterations", dt, f"mean={np.mean(iters):.1f} max={max(iters)}"),
         ("alg1/ratio", 0.0,
          f"mean={np.mean(ratios):.1f}x min={min(ratios):.1f}x max={max(ratios):.1f}x"),
         ("alg1/error_margin", 0.0,
          f"compression_L1/model_L1 mean={np.mean(margins):.3f} (<=1 required)"),
+        ("alg1/batch32", dt_batch,
+         f"speedup={dt / max(dt_batch, 1e-9):.1f}x "
+         f"max_doubling_steps_off={off_by.max():.2f}"),
     ]
 
 

@@ -5,11 +5,17 @@ verdicts on physics + PSNR metrics.
 Run:  PYTHONPATH=src python examples/compression_study.py
 (First run builds and caches the study: ~10 minutes on 1 CPU core.)
 """
+import os
+import sys
+
 import numpy as np
 import jax.numpy as jnp
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
 from benchmarks.common import build_study, per_sim_series
-from repro.core import band_contains, compute_band
+from repro.core import band_contains, compute_band, find_tolerance_batch
+from repro.data import ShardAwareLoader, ShardedCompressedStore
 from repro.metrics import psnr, total_momentum
 
 
@@ -47,6 +53,26 @@ def main():
         v = float(jnp.mean(psnr(jnp.asarray(test[..., 0]),
                                 jnp.asarray(pred[..., 0]))))
         print(f"  x{mult:<4g} ({ratio:5.1f}x): {v:.2f} dB")
+
+    # --- per-sample Algorithm 1, batched + sharded store -------------------
+    # One jitted search over the whole stack, one batched encode per shard
+    # chunk, one kernel decode per batch fetch.  Pass root= to regenerate an
+    # on-disk store (manifest + shard files) from this study's test set.
+    n = min(32, len(test))
+    samples = np.stack([np.transpose(test[i], (2, 0, 1)) for i in range(n)])
+    br = find_tolerance_batch(samples, [meta["model_l1_error"]] * n)
+    store = ShardedCompressedStore(samples, tolerances=br.tolerance,
+                                   shard_size=16)
+    loader = ShardAwareLoader.for_store(store, batch_size=8, seed=0)
+    batch = store.get_batch(loader.take(1)[0])
+    print(f"\nSharded store ({n} samples, shard_size=16):")
+    print(f"  per-sample tolerances: [{br.tolerance.min():.3g}, "
+          f"{br.tolerance.max():.3g}] in <= {int(br.iterations.max())} iters")
+    print(f"  {store.num_shards} shards, ratio {store.ratio:.1f}x, "
+          f"logical {store.stored_bytes / 1e3:.1f} kB "
+          f"(raw {store.sample_nbytes * n / 1e3:.1f} kB)")
+    print(f"  one-call batch decode: {tuple(batch.shape)} "
+          f"in {store.stats.decode_seconds * 1e3:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -9,10 +9,13 @@ from repro.compression.transform import Q_FIXED_POINT, TOTAL_PLANES
 from repro.compression.zfp import (
     CompressedField,
     compressed_nbytes,
+    compressed_nbytes_batch,
     compression_ratio,
     decode,
+    decode_batch,
     decode_fixed_rate,
     encode_fixed_accuracy,
+    encode_fixed_accuracy_batch,
     encode_fixed_rate,
 )
 from repro.compression.transform import blockify, deblockify
@@ -24,9 +27,12 @@ __all__ = [
     "blockify",
     "deblockify",
     "compressed_nbytes",
+    "compressed_nbytes_batch",
     "compression_ratio",
     "decode",
+    "decode_batch",
     "decode_fixed_rate",
     "encode_fixed_accuracy",
+    "encode_fixed_accuracy_batch",
     "encode_fixed_rate",
 ]

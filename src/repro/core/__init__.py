@@ -1,16 +1,35 @@
 """The paper's primary contribution, as a composable JAX feature set:
 
   tolerance      -- Algorithm 1: model-centric compression error tolerance
+                    (per-sample loop + single-jit batched search)
   variability    -- training-randomness bands (the +/-2 sigma yardstick)
-  pipeline       -- CompressedArrayStore + online-decompression data pipeline
+  pipeline       -- ArrayStore protocol + raw / per-sample-compressed stores
   grad_compress  -- beyond-paper: error-bounded gradient compression for DP
+
+The sharded many-samples-per-file store lives in repro.data.shards and is
+re-exported here lazily (it imports this package for IoStats, so an eager
+import would be circular).
 """
-from repro.core.tolerance import ToleranceResult, find_tolerance, algorithm1_per_sample
+from repro.core.tolerance import (
+    BatchToleranceResult, ToleranceResult, algorithm1_per_sample,
+    find_tolerance, find_tolerance_batch,
+)
 from repro.core.variability import VariabilityBand, compute_band, band_contains
-from repro.core.pipeline import CompressedArrayStore, RawArrayStore
+from repro.core.pipeline import (
+    ArrayStore, CompressedArrayStore, IoStats, RawArrayStore,
+)
 
 __all__ = [
-    "ToleranceResult", "find_tolerance", "algorithm1_per_sample",
+    "BatchToleranceResult", "ToleranceResult", "algorithm1_per_sample",
+    "find_tolerance", "find_tolerance_batch",
     "VariabilityBand", "compute_band", "band_contains",
-    "CompressedArrayStore", "RawArrayStore",
+    "ArrayStore", "CompressedArrayStore", "IoStats", "RawArrayStore",
+    "ShardedCompressedStore",
 ]
+
+
+def __getattr__(name):
+    if name == "ShardedCompressedStore":
+        from repro.data.shards import ShardedCompressedStore
+        return ShardedCompressedStore
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Optional, Sequence
+from typing import Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +24,26 @@ import numpy as np
 from repro.compression import encode_fixed_accuracy, encode_fixed_rate
 from repro.compression import transform as T
 from repro.kernels import ops
+
+
+@runtime_checkable
+class ArrayStore(Protocol):
+    """Protocol every training-data store implements.
+
+    Shared by RawArrayStore, CompressedArrayStore and
+    repro.data.shards.ShardedCompressedStore, so loaders, benchmarks and the
+    train loop are store-agnostic: anything with indexed batch access,
+    IO accounting, and a logical footprint.
+    """
+    stats: "IoStats"
+    shape: Tuple[int, ...]
+    num_samples: int
+    sample_nbytes: int
+
+    def get_batch(self, idx: np.ndarray) -> jnp.ndarray: ...
+
+    @property
+    def stored_bytes(self) -> int: ...
 
 
 @dataclasses.dataclass
@@ -45,6 +65,24 @@ def _throttle(nbytes: int, started: float, bandwidth_mbs: Optional[float]):
     elapsed = time.perf_counter() - started
     if needed > elapsed:
         time.sleep(needed - elapsed)
+
+
+def decode_stacked_payloads(payload: np.ndarray, emax: np.ndarray,
+                            padded_shape, shape) -> jnp.ndarray:
+    """One-kernel decode of a stacked batch of packed ZFP streams.
+
+    payload: (B, nb, wmax) int32 plane words, emax: (B, nb) int32.  Samples
+    narrower than wmax are zero-padded (zero words decode as zero planes),
+    so the result is exact per sample.  Shared by CompressedArrayStore and
+    ShardedCompressedStore -- their bit-exactness contract rides on this
+    being the single implementation of the decode tail.
+    """
+    b, nb, wmax = payload.shape
+    blocks = ops.zfp_decode_blocks_fast(
+        jnp.asarray(payload.reshape(b * nb, wmax)),
+        jnp.asarray(emax.reshape(b * nb)), 2 * wmax)
+    batch = T.deblockify(blocks, (b,) + tuple(padded_shape))
+    return batch[(slice(None),) + tuple(slice(0, s) for s in shape)]
 
 
 class RawArrayStore:
@@ -161,12 +199,8 @@ class CompressedArrayStore:
         payloads = [np.pad(p, ((0, 0), (0, wmax - p.shape[1]))) for p in payloads]
         _throttle(nbytes, t0, self.bandwidth_mbs)
         t1 = time.perf_counter()
-        payload = jnp.asarray(np.stack(payloads)).reshape(-1, wmax)
-        emax = jnp.asarray(np.stack(emaxs)).reshape(-1)
-        blocks = ops.zfp_decode_blocks_fast(payload, emax, 2 * wmax)
-        batch = T.deblockify(blocks, (len(idx),) + self._padded_shape)
-        slices = (slice(None),) + tuple(slice(0, s) for s in self.shape)
-        batch = batch[slices]
+        batch = decode_stacked_payloads(np.stack(payloads), np.stack(emaxs),
+                                        self._padded_shape, self.shape)
         batch.block_until_ready()
         self.stats.bytes_read += nbytes
         self.stats.read_seconds += t1 - t0

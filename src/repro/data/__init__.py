@@ -1,3 +1,6 @@
-from repro.data.loader import ShardedLoader, PrefetchLoader
+from repro.data.loader import (PrefetchLoader, ShardAwareLoader,
+                               ShardedLoader)
+from repro.data.shards import ShardedCompressedStore
 
-__all__ = ["ShardedLoader", "PrefetchLoader"]
+__all__ = ["ShardedLoader", "ShardAwareLoader", "PrefetchLoader",
+           "ShardedCompressedStore"]

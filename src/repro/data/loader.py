@@ -67,6 +67,77 @@ class ShardedLoader:
         return [next(it) for _ in range(k)]
 
 
+class ShardAwareLoader(ShardedLoader):
+    """ShardedLoader that shuffles at dataset-shard granularity.
+
+    An epoch permutes the order of the shards this host owns (contiguous
+    host-sliced ownership from distributed.sharding.owned_shards) and the
+    sample order within each shard, so a batch touches at most
+    ``ceil(batch_size / samples_per_shard) + 1`` shard files instead of
+    scattering across all of them.  Deterministic (seed, epoch) shuffling,
+    mid-epoch resume via state()/restore(), and drop_remainder are
+    inherited from ShardedLoader.
+
+    Unlike the base loader's strided split (hosts within +/-1 *sample* of
+    each other), shard ownership can differ by one whole shard, so
+    steps-per-epoch may differ across hosts by up to
+    ``ceil(samples_per_shard / batch_size)``; lockstep data-parallel
+    consumers should drive iteration with a shared step budget
+    (min over hosts of ``steps_per_epoch``) rather than per-host epoch
+    boundaries.
+    """
+
+    def __init__(self, num_samples: int, batch_size: int,
+                 samples_per_shard: int, seed: int = 0,
+                 host_id: int = 0, num_hosts: int = 1,
+                 drop_remainder: bool = True):
+        assert samples_per_shard > 0
+        super().__init__(num_samples, batch_size, seed=seed, host_id=host_id,
+                         num_hosts=num_hosts, drop_remainder=drop_remainder)
+        self.samples_per_shard = samples_per_shard
+        self.num_shards = -(-num_samples // samples_per_shard)
+        # an epoch that yields zero batches would make __iter__ spin
+        # forever: fail loudly at construction instead
+        owned = self._owned_samples()
+        needed = batch_size if drop_remainder else 1
+        if owned < needed:
+            raise ValueError(
+                f"host {host_id}/{num_hosts} owns {owned} samples "
+                f"({self.num_shards} shards of ~{samples_per_shard}); needs "
+                f">= {needed} per epoch (batch_size={batch_size}, "
+                f"drop_remainder={drop_remainder}) -- use fewer hosts or "
+                f"smaller shards")
+
+    def _owned_samples(self) -> int:
+        from repro.distributed.sharding import owned_shards
+        shards = owned_shards(self.num_shards, self.host_id, self.num_hosts)
+        return int(sum(
+            min((int(s) + 1) * self.samples_per_shard, self.n)
+            - int(s) * self.samples_per_shard for s in shards))
+
+    @property
+    def steps_per_epoch(self) -> int:
+        owned = self._owned_samples()
+        return owned // self.bs if self.drop_remainder else -(-owned // self.bs)
+
+    @classmethod
+    def for_store(cls, store, batch_size: int, **kw) -> "ShardAwareLoader":
+        """Loader matched to a ShardedCompressedStore's shard layout."""
+        return cls(store.num_samples, batch_size, store.shard_size, **kw)
+
+    def _epoch_order(self, epoch: int) -> np.ndarray:
+        from repro.distributed.sharding import owned_shards
+        rng = np.random.default_rng((self.seed, epoch))
+        shards = owned_shards(self.num_shards, self.host_id, self.num_hosts)
+        chunks = []
+        for s in rng.permutation(shards):
+            lo = int(s) * self.samples_per_shard
+            idx = np.arange(lo, min(lo + self.samples_per_shard, self.n))
+            rng.shuffle(idx)
+            chunks.append(idx)
+        return np.concatenate(chunks) if chunks else np.empty(0, np.int64)
+
+
 class PrefetchLoader:
     """Wraps (indices iterator, fetch fn) with a bounded background queue."""
 

@@ -1,0 +1,232 @@
+"""Sharded compressed dataset container: many samples per file, one decode.
+
+Per-sample files (``CompressedArrayStore`` with ``root=``) pay a file open +
+zip parse per sample per batch — the classic small-file problem that chunked
+container formats solve for lossy-compressed scientific data.  This module
+packs ``shard_size`` samples into each shard file and decodes a whole batch
+with a single ``zfp_decode_blocks_fast`` call.
+
+On-disk layout (``root/``):
+  manifest.json          -- format tag, sample/padded shapes, block count,
+                            shard size, per-sample tolerances / payload
+                            widths / logical byte counts, shard table
+  shard_00000.bin, ...   -- flat little-endian int32 words; each sample
+                            record is ``nb * width`` payload words (packed
+                            bit planes, see compression/transform.py)
+                            followed by ``nb`` emax words
+
+Shard files are memory-mapped on open, so a batch fetch is a handful of
+contiguous record reads instead of per-sample file opens; the assembled
+batch pads payloads to the in-batch max width (padded words decode as zero
+planes) and runs ONE kernel decode.  Byte-for-byte, every sample record
+holds exactly the stream ``encode_fixed_accuracy`` would produce, so
+``get_batch`` is bit-exact with ``CompressedArrayStore.get_batch``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression import (
+    compressed_nbytes_batch, encode_fixed_accuracy_batch,
+)
+from repro.core.pipeline import IoStats, _throttle, decode_stacked_payloads
+
+MANIFEST_NAME = "manifest.json"
+FORMAT_TAG = "repro-shards-v1"
+
+
+def _shard_filename(k: int) -> str:
+    return f"shard_{k:05d}.bin"
+
+
+class ShardedCompressedStore:
+    """Error-bounded ZFP store packing ``shard_size`` samples per shard.
+
+    Build from samples + per-sample tolerances (``__init__``) — encoding
+    runs through ``encode_fixed_accuracy_batch``, one compiled call per
+    shard-sized chunk — or reattach to an existing directory (``open``).
+    ``root=None`` keeps the identical record layout in memory.
+    """
+
+    def __init__(self, samples: Optional[Sequence[np.ndarray]] = None,
+                 tolerances: Optional[Sequence[float]] = None,
+                 root: Optional[str] = None,
+                 shard_size: int = 32,
+                 bandwidth_mbs: Optional[float] = None,
+                 _manifest: Optional[dict] = None):
+        self.root = root
+        self.bandwidth_mbs = bandwidth_mbs
+        self.stats = IoStats()
+        self._shards: Dict[int, np.ndarray] = {}    # shard id -> int32 words
+        if _manifest is not None:
+            self._init_from_manifest(_manifest)
+            return
+        assert samples is not None and tolerances is not None, \
+            "build from (samples, tolerances) or use ShardedCompressedStore.open"
+        assert len(samples) == len(tolerances)
+        assert shard_size > 0
+        self.shard_size = int(shard_size)
+        self._build(samples, np.asarray(tolerances, np.float32))
+
+    # -- construction --------------------------------------------------------
+
+    def _build(self, samples, tolerances: np.ndarray) -> None:
+        xs = np.stack([np.asarray(s, np.float32) for s in samples])
+        self.num_samples = xs.shape[0]
+        self.shape = tuple(xs.shape[1:])
+        self.sample_nbytes = int(np.prod(self.shape)) * 4
+        self.tolerances = tolerances
+
+        payloads, emaxs, widths, logical = [], [], [], []
+        for lo in range(0, self.num_samples, self.shard_size):
+            chunk = jnp.asarray(xs[lo:lo + self.shard_size])
+            cf = encode_fixed_accuracy_batch(
+                chunk, jnp.asarray(tolerances[lo:lo + self.shard_size]))
+            self._padded_shape = cf.padded_shape
+            logical.append(np.asarray(compressed_nbytes_batch(cf)))
+            pay = np.asarray(cf.payload)                      # (c, nb, MAXW)
+            ema = np.asarray(cf.emax, np.int32)
+            npl = np.asarray(cf.nplanes)
+            for j in range(pay.shape[0]):
+                w = int(np.ceil(npl[j].max() / 2)) or 1
+                payloads.append(pay[j, :, :w])
+                emaxs.append(ema[j])
+                widths.append(w)
+        self.nb = payloads[0].shape[0]
+        self.widths = np.asarray(widths, np.int64)
+        self.logical_bytes_per = np.concatenate(logical).astype(np.int64)
+        self.logical_bytes = int(self.logical_bytes_per.sum())
+        self._compute_offsets()
+
+        if self.root is not None:
+            os.makedirs(self.root, exist_ok=True)
+        for k in range(self.num_shards):
+            lo = k * self.shard_size
+            hi = min(lo + self.shard_size, self.num_samples)
+            words = np.concatenate(
+                [np.concatenate([payloads[i].ravel(), emaxs[i]])
+                 for i in range(lo, hi)]).astype("<i4")
+            if self.root is None:
+                self._shards[k] = words
+            else:
+                words.tofile(os.path.join(self.root, _shard_filename(k)))
+        if self.root is not None:
+            with open(os.path.join(self.root, MANIFEST_NAME), "w") as f:
+                json.dump(self.manifest(), f)
+
+    def _compute_offsets(self) -> None:
+        """Word offset of each sample's record within its shard."""
+        rec_words = self.nb * self.widths + self.nb
+        self._offsets = np.zeros(self.num_samples, np.int64)
+        for k in range(self.num_shards):
+            lo = k * self.shard_size
+            hi = min(lo + self.shard_size, self.num_samples)
+            self._offsets[lo:hi] = (np.cumsum(rec_words[lo:hi])
+                                    - rec_words[lo:hi])
+
+    # -- manifest / reopen ---------------------------------------------------
+
+    def manifest(self) -> dict:
+        return {
+            "format": FORMAT_TAG,
+            "shape": list(self.shape),
+            "padded_shape": list(self._padded_shape),
+            "block_count": int(self.nb),
+            "shard_size": self.shard_size,
+            "num_samples": int(self.num_samples),
+            "tolerances": [float(t) for t in self.tolerances],
+            "widths": [int(w) for w in self.widths],
+            "logical_bytes": [int(b) for b in self.logical_bytes_per],
+            "shards": [{"file": _shard_filename(k),
+                        "start": k * self.shard_size,
+                        "count": (min((k + 1) * self.shard_size,
+                                      self.num_samples)
+                                  - k * self.shard_size)}
+                       for k in range(self.num_shards)],
+        }
+
+    def _init_from_manifest(self, m: dict) -> None:
+        assert m.get("format") == FORMAT_TAG, f"unknown format {m.get('format')}"
+        self.shape = tuple(m["shape"])
+        self._padded_shape = tuple(m["padded_shape"])
+        self.nb = int(m["block_count"])
+        self.shard_size = int(m["shard_size"])
+        self.num_samples = int(m["num_samples"])
+        self.sample_nbytes = int(np.prod(self.shape)) * 4
+        self.tolerances = np.asarray(m["tolerances"], np.float32)
+        self.widths = np.asarray(m["widths"], np.int64)
+        self.logical_bytes_per = np.asarray(m["logical_bytes"], np.int64)
+        self.logical_bytes = int(self.logical_bytes_per.sum())
+        self._compute_offsets()
+
+    @classmethod
+    def open(cls, root: str,
+             bandwidth_mbs: Optional[float] = None) -> "ShardedCompressedStore":
+        """Reattach to an on-disk store; shards memory-map lazily."""
+        with open(os.path.join(root, MANIFEST_NAME)) as f:
+            m = json.load(f)
+        return cls(root=root, bandwidth_mbs=bandwidth_mbs, _manifest=m)
+
+    # -- store protocol ------------------------------------------------------
+
+    @property
+    def num_shards(self) -> int:
+        return -(-self.num_samples // self.shard_size)
+
+    @property
+    def stored_bytes(self) -> int:
+        return self.logical_bytes
+
+    @property
+    def ratio(self) -> float:
+        return self.sample_nbytes * self.num_samples / max(self.logical_bytes, 1)
+
+    def shard_of(self, i: int) -> int:
+        return i // self.shard_size
+
+    def _shard_words(self, k: int) -> np.ndarray:
+        words = self._shards.get(k)
+        if words is None:
+            words = np.memmap(os.path.join(self.root, _shard_filename(k)),
+                              dtype="<i4", mode="r")
+            self._shards[k] = words
+        return words
+
+    def get_batch(self, idx: np.ndarray) -> jnp.ndarray:
+        """Fetch + decode a batch with one kernel call.
+
+        Records are gathered shard-by-shard (sorted so each touched shard's
+        reads are contiguous), payloads padded to the in-batch max width,
+        and the whole (B * nb, wmax) stack decoded at once.
+        """
+        idx = np.asarray(idx)
+        t0 = time.perf_counter()
+        b = len(idx)
+        wmax = int(self.widths[idx].max())
+        payload = np.zeros((b, self.nb, wmax), np.int32)
+        emax = np.empty((b, self.nb), np.int32)
+        nbytes = 0
+        for pos in np.argsort(idx // self.shard_size, kind="stable"):
+            i = int(idx[pos])
+            words = self._shard_words(self.shard_of(i))
+            off, w = int(self._offsets[i]), int(self.widths[i])
+            rec = np.asarray(words[off:off + self.nb * (w + 1)])
+            payload[pos, :, :w] = rec[:self.nb * w].reshape(self.nb, w)
+            emax[pos] = rec[self.nb * w:]
+            nbytes += rec.nbytes
+        _throttle(nbytes, t0, self.bandwidth_mbs)
+        t1 = time.perf_counter()
+        batch = decode_stacked_payloads(payload, emax, self._padded_shape,
+                                        self.shape)
+        batch.block_until_ready()
+        self.stats.bytes_read += nbytes
+        self.stats.read_seconds += t1 - t0
+        self.stats.decode_seconds += time.perf_counter() - t1
+        self.stats.batches += 1
+        return batch

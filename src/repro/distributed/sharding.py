@@ -16,9 +16,31 @@ from __future__ import annotations
 from typing import Any, Dict
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# dataset shard ownership (host-sliced, composes with data.ShardedLoader)
+# ---------------------------------------------------------------------------
+
+def owned_shards(num_shards: int, host_id: int, num_hosts: int) -> np.ndarray:
+    """Contiguous balanced slice of dataset shard ids owned by one host.
+
+    Host h owns shards [start_h, start_h + count_h): the first
+    ``num_shards % num_hosts`` hosts take one extra shard.  Contiguous
+    (rather than strided) ownership keeps each host's reads inside a
+    minimal set of shard files -- the point of packing many samples per
+    shard -- while the union over hosts partitions [0, num_shards)
+    exactly, mirroring the data-parallel batch axis split.
+    """
+    assert 0 <= host_id < num_hosts
+    counts = np.full(num_hosts, num_shards // num_hosts, np.int64)
+    counts[:num_shards % num_hosts] += 1
+    start = int(counts[:host_id].sum())
+    return np.arange(start, start + counts[host_id])
 
 # leaf-name -> spec for stacked (L, ...) layer params
 _LAYER_RULES: Dict[str, P] = {

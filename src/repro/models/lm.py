@@ -203,15 +203,26 @@ def _constrain(x, *spec):
 DP = ("pod", "data")     # batch axes (filtered against the ambient mesh)
 
 
+@jax.custom_jvp
 def _reduce_barrier(x):
     """Keep TP partial-sum reductions in bf16 (§Perf iteration 1).
 
     XLA's SPMD partitioner may hoist a consumer's f32 upcast above the
     GSPMD-inserted all-reduce, doubling wire bytes.  An optimization barrier
     between the (bf16) partial product and the upcasting consumer pins the
-    collective to bf16.  Transposes cleanly, so backward dgrad reductions
-    stay bf16 too."""
+    collective to bf16.
+
+    jax 0.4.37's ``optimization_barrier`` primitive has neither a JVP nor a
+    transpose rule, so the barrier is wrapped in a custom_jvp that passes the
+    tangent through untouched: the primal keeps the bf16-collective pin while
+    gradients see an identity (the tangent cannot be barriered — its
+    transpose would hit the same missing rule)."""
     return jax.lax.optimization_barrier(x)
+
+
+@_reduce_barrier.defjvp
+def _reduce_barrier_jvp(primals, tangents):
+    return _reduce_barrier(primals[0]), tangents[0]
 
 # Per-layer gathered-weight specs: weights arrive FSDP-sharded over "data";
 # constraining them to their TP-only spec forces GSPMD into the ZeRO-3
@@ -316,6 +327,13 @@ def moe_block(lp, x, cfg: ArchConfig):
     xt = _constrain(x.reshape(ng, g_sz, d), DP, None, None)
 
     logits = jnp.einsum("gnd,de->gne", xt, lp["router"]).astype(jnp.float32)
+    # decode/prefill consistency: top-k expert selection must not flip on
+    # sub-bf16 numerical noise between the chunked-prefill and step-decode
+    # attention paths (a near-tie flip is a discontinuity the cache-match
+    # tests would see as divergence).  Snapping scores to the bf16 grid
+    # makes selection invariant to such noise; routing weights were already
+    # bf16 downstream, so no precision is lost.
+    logits = logits.astype(jnp.bfloat16).astype(jnp.float32)
     probs = jax.nn.softmax(logits, -1)
     top_p, top_ids = jax.lax.top_k(probs, k)                    # (G, N, K)
     top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)

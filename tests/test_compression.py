@@ -1,8 +1,18 @@
-"""Codec correctness: round trips, error bounds (property-based), ratios."""
+"""Codec correctness: round trips, error bounds (property-based), ratios.
+
+The property-based tests use hypothesis when available but degrade to a
+deterministic seeded grid when it is not installed (the tier-1 suite must
+never lose collection to an optional dep).
+"""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.compression import (
     compressed_nbytes, compression_ratio, decode, decode_fixed_rate,
@@ -51,11 +61,7 @@ def test_fixed_accuracy_bound(smooth_field, tol):
     assert err <= tol, f"L-inf bound violated: {err} > {tol}"
 
 
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 10_000),
-       scale=st.floats(1e-3, 1e3),
-       tol_frac=st.floats(1e-4, 0.5))
-def test_fixed_accuracy_bound_property(seed, scale, tol_frac):
+def _check_fixed_accuracy_bound(seed, scale, tol_frac):
     """Property: for any finite field and tolerance, the bound holds."""
     r = np.random.default_rng(seed)
     x = (r.standard_normal((24, 20)) * scale).astype(np.float32)
@@ -63,6 +69,25 @@ def test_fixed_accuracy_bound_property(seed, scale, tol_frac):
     cf = encode_fixed_accuracy(jnp.asarray(x), tol)
     err = np.abs(np.asarray(decode(cf)) - x).max()
     assert err <= tol * (1 + 1e-6)
+
+
+# deterministic fallback grid spanning the hypothesis search space
+_BOUND_CASES = [(seed, scale, tol_frac)
+                for seed in (0, 1, 7919)
+                for scale in (1e-3, 1.0, 1e3)
+                for tol_frac in (1e-4, 1e-2, 0.5)]
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           scale=st.floats(1e-3, 1e3),
+           tol_frac=st.floats(1e-4, 0.5))
+    def test_fixed_accuracy_bound_property(seed, scale, tol_frac):
+        _check_fixed_accuracy_bound(seed, scale, tol_frac)
+else:
+    @pytest.mark.parametrize("seed,scale,tol_frac", _BOUND_CASES)
+    def test_fixed_accuracy_bound_property(seed, scale, tol_frac):
+        _check_fixed_accuracy_bound(seed, scale, tol_frac)
 
 
 def test_zero_field():
