@@ -15,6 +15,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import CompressedArrayStore, find_tolerance
+from repro.core.pipeline import RawArrayStore, channels_last
 from repro.metrics import mixing_layer_thickness, psnr, total_mass
 from repro.models.surrogate import (FieldNormalizer, SurrogateConfig,
                                     make_conditions)
@@ -30,6 +31,8 @@ def main():
     ap.add_argument("--compressed", action="store_true")
     ap.add_argument("--lossy-ckpt-bits", type=int, default=None)
     ap.add_argument("--ckpt-dir", default="/tmp/surrogate_ckpt")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="prefetch queue depth (0 = synchronous fetch)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -46,20 +49,26 @@ def main():
         samples = [np.transpose(x, (2, 0, 1)) for x in nf]
         store = CompressedArrayStore(samples, tolerances=[res.tolerance] * len(nf))
         print(f"compressed store: {store.ratio:.1f}x")
-        get = lambda i: jnp.transpose(store.get_batch(i), (0, 2, 3, 1))
+        transform = channels_last
     else:
-        get = lambda i: jnp.asarray(nf[i])
+        store = RawArrayStore(nf)
+        transform = None
 
     cfg = SurrogateConfig(height=RT_SPEC.ny, width=RT_SPEC.nx,
                           base_channels=args.channels)
     tc = TrainConfig(epochs=args.epochs, batch_size=32, lr=3e-4,
                      ckpt_dir=args.ckpt_dir, ckpt_every_steps=25,
-                     lossy_ckpt_bits=args.lossy_ckpt_bits, log_every=10)
+                     lossy_ckpt_bits=args.lossy_ckpt_bits, log_every=10,
+                     prefetch=args.prefetch)
     t0 = time.time()
-    params, losses = train_surrogate(cfg, tc, cond, get, len(nf))
+    params, losses = train_surrogate(cfg, tc, cond, store,
+                                     target_transform=transform)
     steps = args.epochs * (len(nf) // 32)
-    print(f"trained ~{steps} steps in {time.time() - t0:.0f}s; "
-          f"loss {losses[0][1]:.3f} -> {losses[-1][1]:.3f}")
+    io_s = store.stats.read_seconds + store.stats.decode_seconds
+    span = (f"loss {losses[0][1]:.3f} -> {losses[-1][1]:.3f}" if losses
+            else "no logged steps (run shorter than log_every or fully resumed)")
+    print(f"trained ~{steps} steps in {time.time() - t0:.0f}s "
+          f"(host io+decode {io_s:.1f}s, prefetch depth {args.prefetch}); {span}")
 
     # evaluate on the last simulation
     test = slice((args.sims - 1) * nsnaps, args.sims * nsnaps)

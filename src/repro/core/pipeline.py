@@ -67,6 +67,16 @@ def _throttle(nbytes: int, started: float, bandwidth_mbs: Optional[float]):
         time.sleep(needed - elapsed)
 
 
+def channels_last(batch: jnp.ndarray) -> jnp.ndarray:
+    """(B, C, H, W) store batch -> (B, H, W, C) model layout.
+
+    The stores compress over the trailing two dims, so they hold samples
+    channels-first; the surrogate consumes channels-last.  Pass this as
+    ``train_surrogate(..., target_transform=channels_last)``.
+    """
+    return jnp.transpose(batch, (0, 2, 3, 1))
+
+
 def decode_stacked_payloads(payload: np.ndarray, emax: np.ndarray,
                             padded_shape, shape) -> jnp.ndarray:
     """One-kernel decode of a stacked batch of packed ZFP streams.
@@ -98,7 +108,9 @@ class RawArrayStore:
         n = len(samples)
         self.shape = tuple(np.asarray(samples[0]).shape)
         if root is None:
-            self._mem = np.stack([np.asarray(s) for s in samples])
+            # same float32 cast as the on-disk path: float64 inputs must not
+            # change sample_nbytes / throughput accounting between modes
+            self._mem = np.stack([np.asarray(s, np.float32) for s in samples])
         else:
             os.makedirs(root, exist_ok=True)
             for i in range(n):

@@ -50,8 +50,16 @@ class ShardedLoader:
         shard = order[self.host_id::self.num_hosts]      # host sharding
         return shard
 
-    def __iter__(self) -> Iterator[np.ndarray]:
-        while True:
+    def iter_epochs(self, max_epochs: Optional[int] = None) -> Iterator[np.ndarray]:
+        """Yield index batches until ``self.epoch`` reaches ``max_epochs``.
+
+        Iteration picks up from the current ``(epoch, step_in_epoch)`` state:
+        a loader restored from a checkpoint resumes at the exact batch of the
+        exact permutation a fresh run would have produced, because each
+        epoch's order is derived from ``(seed, epoch)`` alone — never from
+        how many draws preceded it.  ``max_epochs=None`` iterates forever.
+        """
+        while max_epochs is None or self.epoch < max_epochs:
             order = self._epoch_order(self.epoch)
             steps = len(order) // self.bs if self.drop_remainder else \
                 -(-len(order) // self.bs)
@@ -61,6 +69,9 @@ class ShardedLoader:
                 yield order[i:i + self.bs]
             self.epoch += 1
             self.step_in_epoch = 0
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        return self.iter_epochs(None)
 
     def take(self, k: int):
         it = iter(self)
@@ -139,7 +150,18 @@ class ShardAwareLoader(ShardedLoader):
 
 
 class PrefetchLoader:
-    """Wraps (indices iterator, fetch fn) with a bounded background queue."""
+    """Wraps (indices iterator, fetch fn) with a bounded background queue.
+
+    Termination contract:
+      * a finite upstream iterator ends cleanly — the worker enqueues an
+        end-of-stream sentinel and ``__next__`` raises StopIteration;
+      * worker exceptions (from the iterator or the fetch) re-raise on the
+        consumer side, then subsequent ``__next__`` calls raise StopIteration;
+      * ``close()`` unblocks a worker stuck on a full-queue put, drains, and
+        joins it, so abandoning iteration mid-stream never leaks the thread.
+    """
+
+    _DONE = object()
 
     def __init__(self, index_iter: Iterator[np.ndarray],
                  fetch: Callable[[np.ndarray], object], depth: int = 2):
@@ -151,29 +173,67 @@ class PrefetchLoader:
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
+    def _put(self, item) -> bool:
+        """Blocking put that aborts (returns False) once close() is requested."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _worker(self):
         try:
             for idx in self._iter:
                 if self._stop.is_set():
                     return
-                self._q.put(self._fetch(idx))
+                if not self._put(self._fetch(idx)):
+                    return
         except BaseException as e:      # surfaced on the consumer side
             self._err = e
-            self._q.put(None)
+        finally:
+            self._put(self._DONE)
 
     def __iter__(self):
         return self
 
     def __next__(self):
         item = self._q.get()
-        if item is None and self._err is not None:
-            raise self._err
+        if item is self._DONE:
+            try:                        # keep repeated __next__ non-blocking
+                self._q.put_nowait(self._DONE)
+            except queue.Full:
+                pass
+            if self._err is not None:
+                err, self._err = self._err, None
+                raise err
+            raise StopIteration
         return item
 
     def close(self):
+        """Stop the worker (even mid-put), drain the queue, join the thread."""
         self._stop.set()
-        try:
+        while self._thread.is_alive():
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.05)
+        try:                            # drop items raced in by the worker
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        try:                            # iterating after close(): StopIteration
+            self._q.put_nowait(self._DONE)
+        except queue.Full:
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

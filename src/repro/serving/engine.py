@@ -62,7 +62,10 @@ class ServeEngine:
                                            jnp.int32(plen + s))
                 cur = jnp.argmax(logits, -1).astype(jnp.int32)
             self.stats["seconds"] += time.time() - t0
-            self.stats["tokens"] += steps * len(chunk)
+            # only tokens actually delivered: padding slots contribute 0 and
+            # short requests stop counting at their own max_new_tokens, even
+            # though the batch decodes max(max_new_tokens) steps
+            self.stats["tokens"] += sum(r.max_new_tokens for r in chunk)
             for j, r in enumerate(chunk):
                 if r.max_new_tokens:
                     r.output = np.asarray(outs[j][: r.max_new_tokens])

@@ -9,6 +9,14 @@ Checkpoints are *logically indexed* (flattened path -> full unsharded array),
 so a restart may use a different mesh shape (elastic scaling): the runtime
 re-shards on load.
 
+The manifest's ``extra`` dict carries the data-pipeline state alongside the
+model: the train loop stores ``extra["loader"] = {epoch, step_in_epoch,
+seed}`` (see repro.data.loader.ShardedLoader.state) so a resumed run
+restores the loader to the exact batch position, not just the parameters --
+the exact-resume guarantee documented in train/loop.py.  Params and
+optimizer float32 tensors round-trip bit-exactly through the npz payload
+unless ``lossy_bits`` is set.
+
 ``lossy_bits`` routes params/opt-state float tensors through the fixed-rate
 ZFP codec (DESIGN.md §4.4); the manifest records realized ratios.  The safety
 criterion mirrors Algorithm 1: the induced parameter perturbation must stay

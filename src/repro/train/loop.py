@@ -1,22 +1,36 @@
-"""Surrogate training loop: shuffled epochs, jitted steps, checkpoint/restart.
+"""Surrogate training loop: store/loader-driven epochs, prefetch overlap,
+bit-exact checkpoint/restart.
 
-The data source is either raw in-memory fields or a CompressedArrayStore
-(online per-batch decompression -- the paper's workflow 2).  The loop
-checkpoints model + optimizer + data-pipeline state (epoch, step, shuffle
-seed) so a preempted run resumes exactly, and auto-resumes from the newest
-complete checkpoint on restart.
+The data source is anything implementing the ``ArrayStore`` protocol (raw
+in-memory fields, ``CompressedArrayStore`` online per-batch decompression --
+the paper's workflow 2 -- or a ``ShardedCompressedStore``), or a legacy
+``idx -> batch`` callable.  Batches are ordered by a ``ShardedLoader`` (or a
+``ShardAwareLoader`` matched to a sharded store's layout) and fetched on a
+``PrefetchLoader`` worker thread so host-side read + decode overlaps the
+jitted train step.
+
+Exact-resume guarantee: every epoch's permutation is derived from
+``(seed, epoch)`` alone, and the loader state (epoch, step_in_epoch, seed)
+is written into each checkpoint manifest.  A run killed mid-epoch and
+restarted therefore consumes the exact batches, in the exact order, at the
+exact global steps an uninterrupted run would have -- final params are
+bit-identical, and the resumed call's loss history matches the fresh run's
+post-resume entries bit-for-bit (asserted in tests/test_resume.py).  This is the
+precondition for the paper's §III variability bands: restart noise would
+otherwise pollute the run-to-run spread that serves as the compression
+yardstick.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.data.loader import PrefetchLoader, ShardAwareLoader, ShardedLoader
 from repro.models.surrogate import SurrogateConfig, apply_surrogate, init_surrogate, l1_loss
 from repro.train import checkpoint as ckpt
 from repro.train.optimizer import AdamConfig, adam_init, adam_update
@@ -30,8 +44,11 @@ class TrainConfig:
     seed: int = 0
     ckpt_dir: Optional[str] = None
     ckpt_every_steps: int = 200
+    ckpt_keep: int = 3
     lossy_ckpt_bits: Optional[int] = None
     log_every: int = 50
+    prefetch: int = 2               # queue depth; 0 = synchronous fetch
+    max_steps: Optional[int] = None  # simulated preemption: stop without a final save
 
 
 @partial(jax.jit, static_argnames=("cfg", "opt_cfg"))
@@ -42,63 +59,110 @@ def _train_step(params, opt_state, cond, target, cfg: SurrogateConfig,
     return params, opt_state, loss
 
 
-def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
-                    conditions: np.ndarray, get_batch_targets: Callable,
-                    num_samples: int, params=None, hooks=None):
-    """Train; ``get_batch_targets(idx) -> (B, H, W, F)`` normalized targets.
+def _make_loader(data, num_samples: Optional[int],
+                 train_cfg: "TrainConfig") -> ShardedLoader:
+    n = getattr(data, "num_samples", num_samples)
+    if n is None:
+        raise ValueError("num_samples is required when the data source is a "
+                         "callable rather than an ArrayStore")
+    if hasattr(data, "shard_size"):  # align batches with the shard layout
+        return ShardAwareLoader.for_store(data, train_cfg.batch_size,
+                                          seed=train_cfg.seed)
+    return ShardedLoader(n, train_cfg.batch_size, seed=train_cfg.seed)
 
-    The target indirection is the compression seam: raw training passes a
-    slice of the in-memory array; compressed training passes the store's
-    jitted decode.  Returns (params, loss_history).
+
+def _save(train_cfg: "TrainConfig", step: int, params, opt_state,
+          loader_state: dict) -> None:
+    ckpt.save_checkpoint(
+        train_cfg.ckpt_dir, step, {"params": params, "opt": opt_state},
+        extra={"loader": dict(loader_state),
+               "epoch": loader_state["epoch"],
+               "seed": loader_state["seed"]},
+        lossy_bits=train_cfg.lossy_ckpt_bits, keep=train_cfg.ckpt_keep)
+
+
+def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
+                    conditions: np.ndarray,
+                    data: Union[Callable, object],
+                    num_samples: Optional[int] = None, params=None,
+                    hooks=None, loader: Optional[ShardedLoader] = None,
+                    target_transform: Optional[Callable] = None):
+    """Train; returns (params, loss_history).
+
+    ``data`` is the compression seam: an ArrayStore (``get_batch(idx)`` --
+    raw memmap or online ZFP decode) or a legacy ``idx -> (B, H, W, F)``
+    callable (then ``num_samples`` is required).  ``target_transform``
+    post-processes fetched batches (e.g. channels-first stores feeding the
+    channels-last model).  ``loader`` overrides the auto-built one -- pass a
+    ``ShardAwareLoader`` with host_id/num_hosts for multi-host training.
     """
+    get_targets = data.get_batch if hasattr(data, "get_batch") else data
+    if target_transform is not None:
+        get_targets = (lambda base: lambda idx: target_transform(base(idx)))(get_targets)
     opt_cfg = AdamConfig(lr=train_cfg.lr)
     key = jax.random.PRNGKey(train_cfg.seed)
     if params is None:
         params = init_surrogate(key, model_cfg)
     opt_state = adam_init(params, opt_cfg)
+    if loader is None:
+        loader = _make_loader(data, num_samples, train_cfg)
 
-    start_epoch, start_step = 0, 0
-    rng = np.random.default_rng(train_cfg.seed + 1)
+    step = 0
     if train_cfg.ckpt_dir:
         latest = ckpt.latest_checkpoint(train_cfg.ckpt_dir)
         if latest:
             state, meta = ckpt.restore_checkpoint(
                 latest, {"params": params, "opt": opt_state})
             params, opt_state = state["params"], state["opt"]
-            start_epoch = meta["extra"].get("epoch", 0)
-            start_step = meta["step"]
-            rng = np.random.default_rng(meta["extra"].get("rng_seed",
-                                                          train_cfg.seed + 1))
+            step = meta["step"]
+            lstate = meta["extra"].get("loader")
+            if lstate is None:          # pre-loader manifest: epoch granularity
+                lstate = {"epoch": meta["extra"].get("epoch", 0),
+                          "step_in_epoch": 0, "seed": loader.seed}
+            loader.restore(lstate)
+
+    if train_cfg.max_steps is not None and step >= train_cfg.max_steps:
+        return params, []               # already at the preemption point
 
     conditions = jnp.asarray(conditions)
-    bs = train_cfg.batch_size
+    # ``last_state`` is the loader position to store in the next checkpoint.
+    # With prefetch the live loader runs ahead of consumption, so each batch
+    # carries the state snapshot taken when it was drawn.
+    last_state = dict(loader.state())
+
+    def _snapshots():
+        for idx in loader.iter_epochs(train_cfg.epochs):
+            yield dict(loader.state()), idx
+
+    def _fetch(item):
+        lstate, idx = item
+        return lstate, conditions[idx], get_targets(idx)
+
+    stream = (PrefetchLoader(_snapshots(), _fetch, depth=train_cfg.prefetch)
+              if train_cfg.prefetch > 0 else map(_fetch, _snapshots()))
     losses = []
-    step = start_step
-    for epoch in range(start_epoch, train_cfg.epochs):
-        order = rng.permutation(num_samples)
-        for i in range(0, num_samples - bs + 1, bs):
-            idx = order[i:i + bs]
-            cond = conditions[idx]
-            target = get_batch_targets(idx)
+    saved_step = -1
+    try:
+        for lstate, cond, target in stream:
             params, opt_state, loss = _train_step(
                 params, opt_state, cond, target, model_cfg, opt_cfg)
             step += 1
+            last_state = lstate
             if step % train_cfg.log_every == 0:
                 losses.append((step, float(loss)))
             if hooks:
                 for h in hooks:
                     h(step, params, float(loss))
             if (train_cfg.ckpt_dir and step % train_cfg.ckpt_every_steps == 0):
-                ckpt.save_checkpoint(
-                    train_cfg.ckpt_dir, step,
-                    {"params": params, "opt": opt_state},
-                    extra={"epoch": epoch, "rng_seed": train_cfg.seed + 1 + epoch},
-                    lossy_bits=train_cfg.lossy_ckpt_bits)
-    if train_cfg.ckpt_dir:
-        ckpt.save_checkpoint(train_cfg.ckpt_dir, step,
-                             {"params": params, "opt": opt_state},
-                             extra={"epoch": train_cfg.epochs},
-                             lossy_bits=train_cfg.lossy_ckpt_bits)
+                _save(train_cfg, step, params, opt_state, last_state)
+                saved_step = step
+            if train_cfg.max_steps is not None and step >= train_cfg.max_steps:
+                return params, losses   # preempted: no final save
+    finally:
+        if isinstance(stream, PrefetchLoader):
+            stream.close()
+    if train_cfg.ckpt_dir and step != saved_step:
+        _save(train_cfg, step, params, opt_state, last_state)
     return params, losses
 
 

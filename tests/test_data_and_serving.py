@@ -62,6 +62,66 @@ def test_prefetch_loader_propagates_errors():
         next(pf)
 
 
+def test_prefetch_loader_finite_iterator_exhausts():
+    """No deadlock on normal exhaustion: the worker signals end-of-stream."""
+    ld = ShardedLoader(40, 8, seed=2)
+    pf = PrefetchLoader(ld.iter_epochs(2), fetch=lambda i: i.copy())
+    got = list(pf)                       # blocks forever without the sentinel
+    assert len(got) == 10
+    assert sorted(np.concatenate(got[:5]).tolist()) == list(range(40))
+    with pytest.raises(StopIteration):
+        next(pf)
+    pf.close()
+
+
+def test_prefetch_loader_close_joins_blocked_worker():
+    """close() must unstick a worker blocked on a full-queue put and join it."""
+    pf = PrefetchLoader(iter(ShardedLoader(10_000, 1, seed=0)),
+                        fetch=lambda i: i, depth=1)
+    next(pf)                             # worker now blocked on a full queue
+    pf.close()
+    assert not pf._thread.is_alive()
+    with pytest.raises(StopIteration):   # iteration after close terminates
+        next(pf)
+
+
+def test_prefetch_loader_error_mid_stream_then_stops():
+    def fetch(idx):
+        if idx[0] >= 8:
+            raise RuntimeError("late failure")
+        return idx
+    batches = [np.arange(k, k + 4) for k in range(0, 16, 4)]
+    pf = PrefetchLoader(iter(batches), fetch=fetch)
+    assert np.array_equal(next(pf), batches[0])
+    assert np.array_equal(next(pf), batches[1])
+    with pytest.raises(RuntimeError, match="late failure"):
+        next(pf)
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+def test_prefetch_loader_context_manager():
+    with PrefetchLoader(iter(ShardedLoader(100, 10, seed=1)),
+                        fetch=lambda i: i, depth=2) as pf:
+        next(pf)
+    assert not pf._thread.is_alive()
+
+
+def test_raw_store_casts_float64_consistently(tmp_path):
+    """In-memory and on-disk modes must agree on dtype and byte accounting."""
+    from repro.core.pipeline import RawArrayStore
+    rng = np.random.default_rng(0)
+    samples = [rng.standard_normal((4, 4)) for _ in range(3)]   # float64 in
+    mem = RawArrayStore(samples)
+    disk = RawArrayStore(samples, root=str(tmp_path / "raw"))
+    assert mem.sample_nbytes == disk.sample_nbytes == 4 * 4 * 4
+    idx = np.array([0, 2])
+    bm, bd = mem.get_batch(idx), disk.get_batch(idx)
+    assert bm.dtype == bd.dtype
+    np.testing.assert_array_equal(np.asarray(bm), np.asarray(bd))
+    assert mem.stats.bytes_read == disk.stats.bytes_read
+
+
 def test_serving_engine_roundtrip():
     from repro.configs import reduced_config
     from repro.models import lm
@@ -78,6 +138,26 @@ def test_serving_engine_roundtrip():
     for r in done:
         assert r.output.shape == (4,)
         assert (0 <= r.output).all() and (r.output < cfg.vocab_size).all()
+    assert engine.tokens_per_second > 0
+
+
+def test_serving_token_accounting_excludes_padding():
+    """stats["tokens"] counts delivered tokens only: padding slots and the
+    over-run of short requests (batch decodes max(max_new_tokens) steps)
+    must not inflate tokens_per_second."""
+    from repro.configs import reduced_config
+    from repro.models import lm
+    from repro.serving import ServeEngine
+    from repro.serving.engine import Request
+    cfg = reduced_config("mamba2-130m")
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, batch_slots=4, max_seq=32)
+    rng = np.random.default_rng(1)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                    max_new_tokens=m) for m in (5, 2)]
+    done = engine.run(reqs)              # 2 real requests + 2 padding slots
+    assert len(done) == 2
+    assert engine.stats["tokens"] == 7   # 5 + 2, not steps * slots = 20
     assert engine.tokens_per_second > 0
 
 
