@@ -44,6 +44,40 @@ def _train_on(cfg, tc, cond, targets_fn, n, seed):
     return params
 
 
+def ensemble_timing_row(tag, model_cfg, train_cfg, cond, store, seeds,
+                        target_transform=None):
+    """Warmed wall-clock of the vmapped N-seed ensemble vs N sequential
+    ``train_surrogate`` runs; returns one benchmark CSV row.
+
+    Shared by benchmarks/epoch_time.py and benchmarks/ensemble_certify.py so
+    the warmup/timing protocol (jit-compile both paths first, then time)
+    exists exactly once.
+    """
+    from repro.core.ensemble import train_ensemble
+    train_ensemble(model_cfg, train_cfg, cond, store, seeds,   # jit warmup
+                   target_transform=target_transform)
+    train_surrogate(model_cfg, dataclasses.replace(train_cfg, seed=seeds[0]),
+                    cond, store, target_transform=target_transform)
+    # wall-clock BOTH paths externally so per-run setup (loader/init
+    # construction) is counted symmetrically
+    t0 = time.time()
+    train_ensemble(model_cfg, train_cfg, cond, store, seeds,
+                   target_transform=target_transform)
+    ens_s = time.time() - t0
+    t0 = time.time()
+    for s in seeds:
+        train_surrogate(model_cfg, dataclasses.replace(train_cfg, seed=s),
+                        cond, store, target_transform=target_transform)
+    seq_s = time.time() - t0
+    n = len(seeds)
+    vs_single = n * ens_s / seq_s
+    flag = f"(under {n}x)" if vs_single < n else f"(NOT under {n}x)"
+    return (f"{tag}/ensemble_n{n}", ens_s * 1e6,
+            f"vmapped={ens_s:.2f}s sequential_{n}={seq_s:.2f}s "
+            f"vs_single={vs_single:.2f}x {flag} "
+            f"speedup={seq_s / max(ens_s, 1e-9):.2f}x")
+
+
 def build_study(force: bool = False) -> dict:
     os.makedirs(DATA_DIR, exist_ok=True)
     cache = os.path.join(DATA_DIR, "study.npz")

@@ -1,0 +1,122 @@
+"""Paper §III-§IV end-to-end: vmapped seed ensemble + tolerance certification.
+
+Exercises ``repro.core.ensemble``: the N-seeds-in-one-jitted-step trainer
+(reporting its wall-clock against a single ``train_surrogate`` run — the
+whole point is N-seed time well under N x one run) and ``certify_tolerance``
+(seed band -> batched Algorithm 1 -> per-candidate lossy retraining in one
+vmapped sweep -> max benign tolerance + achieved ratio, paper Fig. 3/6).
+
+``run()`` certifies on the cached study's test set; ``--smoke`` runs a
+study-free synthetic certification (learnable conditions, physical field
+channels so mass/momentum are meaningful) in well under a minute — CI uses
+it to exercise the full certification pipeline on every PR.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import ensemble_timing_row
+from repro.core import RawArrayStore
+from repro.core.ensemble import certify_tolerance
+from repro.sim.synthetic import synthetic_study
+from repro.train.loop import TrainConfig
+
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "data", "certification")
+
+
+def _timing_row(tag, model_cfg, train_cfg, cond, fields, seeds):
+    """N-seed vmapped wall-clock vs N sequential single-model runs."""
+    return ensemble_timing_row(tag, model_cfg, train_cfg, cond,
+                               RawArrayStore(fields), seeds)
+
+
+def _certify_rows(tag, model_cfg, train_cfg, cond, fields, seeds, multiples,
+                  shard_size, bisect_rounds=0, artifact_dir=None,
+                  require_benign=False):
+    t0 = time.time()
+    res = certify_tolerance(
+        model_cfg, train_cfg, cond, fields,
+        eval_conditions=cond, eval_targets=fields,
+        seeds=seeds, multiples=multiples, shard_size=shard_size,
+        bisect_rounds=bisect_rounds, artifact_dir=artifact_dir)
+    total = time.time() - t0
+    rows = []
+    for c in res.candidates:
+        worst = max(c.per_metric.values(), key=lambda v: v.dev_vs_seeds)
+        rows.append((f"{tag}/x{c.multiple:g}", 0.0,
+                     f"ratio={c.ratio:.1f}x benign={c.benign} "
+                     f"worst_dev={worst.dev_vs_seeds:.2f} "
+                     f"psnr_frac={c.per_metric['psnr'].inside_frac:.2f}"))
+    mb = res.max_benign
+    if require_benign and mb is None:
+        # the smoke config is tuned so x0.5 IS benign; NONE here means the
+        # certification pipeline regressed, and CI must go red
+        raise RuntimeError(f"{tag}: no benign tolerance certified "
+                           f"(expected the smallest multiple to pass)")
+    rows.append((f"{tag}/certified", total * 1e6,
+                 "max_benign=NONE" if mb is None else
+                 f"max_benign=x{mb.multiple:g} ratio={mb.ratio:.1f}x "
+                 f"tol={mb.median_tolerance:.3g} e={res.model_l1_error:.4f} "
+                 f"ens={res.ensemble_seconds:.1f}s "
+                 f"sweep={res.sweep_seconds:.1f}s"))
+    return rows
+
+
+def run():
+    """Study-scale: certify on the cached study's test set (4 sims x T).
+
+    NOTE: at this deliberately small scale the model is far from converged,
+    so Algorithm 1's bound e (the model's own L1 error) is dominated by
+    underfitting and even the x0.0625 multiple compresses ~4x; the sweep can
+    legitimately certify NOTHING benign (the rows still report per-candidate
+    ratios and deviations).  The smoke config below is the tuned reference
+    where the benign/degraded edge is visible — CI asserts on that path.
+    """
+    from benchmarks.common import MODEL_CFG, build_study
+    study = build_study()
+    fields = np.asarray(study["test_nf"], np.float32)
+    cond = np.asarray(study["test_cond"], np.float32)
+    tc = TrainConfig(epochs=8, batch_size=8, lr=1e-3, log_every=20)
+    seeds = (0, 1, 2, 3)
+    rows = _timing_row("ensemble_certify/study", MODEL_CFG, tc, cond, fields,
+                       seeds)
+    rows = [rows] + _certify_rows(
+        "ensemble_certify/study", MODEL_CFG, tc, cond, fields, seeds,
+        multiples=(0.0625, 0.25, 2.0, 16.0), shard_size=16,
+        artifact_dir=ARTIFACT_DIR)
+    return rows
+
+
+def run_smoke():
+    """Study-free CI variant: tiny N, few steps, full certification path.
+
+    Data comes from repro.sim.synthetic.synthetic_study — a learnable
+    mapping with a positive density channel, the regime where the
+    benign/degraded edge is visible (see run()'s NOTE).
+    """
+    cfg, cond, fields = synthetic_study()
+    tc = TrainConfig(epochs=5, batch_size=8, lr=3e-3, log_every=10)
+    rows = [_timing_row("ensemble_certify/smoke", cfg,
+                        dataclasses.replace(tc, epochs=2), cond, fields,
+                        seeds=(0, 1, 2, 3))]
+    rows += _certify_rows("ensemble_certify/smoke", cfg, tc, cond, fields,
+                          seeds=(0, 1, 2), multiples=(0.5, 16.0),
+                          shard_size=16, bisect_rounds=1,
+                          require_benign=True)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="synthetic data, no cached study (fast; used in CI)")
+    args = ap.parse_args()
+    for r in (run_smoke() if args.smoke else run()):
+        print(",".join(map(str, r)))

@@ -25,6 +25,7 @@ from repro.core.pipeline import IoStats, channels_last
 from repro.train.loop import TrainConfig, train_surrogate
 
 WORKERS = (24, 48, 72)
+ENSEMBLE_SEEDS = (0, 1, 2, 3)
 
 
 def _epoch_seconds(model_cfg, store, cond, batch_size, prefetch, transform):
@@ -56,6 +57,23 @@ def _measure(model_cfg, stores, cond, batch_size):
     return rows
 
 
+def _ensemble_epoch(model_cfg, samples, cond, batch_size, tag,
+                    seeds=ENSEMBLE_SEEDS):
+    """Per-epoch time of the vmapped N-seed ensemble vs N sequential runs.
+
+    The paper's §III band needs N seed models; the vmapped trainer advances
+    all of them in one jitted step per batch, so the N-seed epoch should
+    cost well under N single-model epochs.  Uses an unthrottled in-memory
+    raw store: this row isolates the compute/dispatch win (the I/O story is
+    the sync-vs-overlap rows above).
+    """
+    from benchmarks.common import ensemble_timing_row
+    tc = TrainConfig(epochs=1, batch_size=batch_size, lr=1e-3, log_every=1)
+    return ensemble_timing_row(tag, model_cfg, tc, cond,
+                               RawArrayStore(samples), seeds,
+                               target_transform=channels_last)
+
+
 def run(tmp_root: str = "/tmp/repro_epoch_bench"):
     from benchmarks.common import MODEL_CFG, build_study
     from benchmarks.loading_throughput import FILE_SYSTEMS
@@ -79,6 +97,7 @@ def run(tmp_root: str = "/tmp/repro_epoch_bench"):
                                   bandwidth_mbs=bw), transform),
         ]
         rows += _measure(MODEL_CFG, stores, cond, batch_size=16)
+    rows.append(_ensemble_epoch(MODEL_CFG, samples, cond, 16, "epoch_time"))
     return rows
 
 
@@ -105,7 +124,9 @@ def run_smoke(tmp_root: str = "/tmp/repro_epoch_smoke"):
                               root=f"{tmp_root}/zfp", bandwidth_mbs=bw),
          transform),
     ]
-    return _measure(cfg, stores, cond, batch_size=8)
+    rows = _measure(cfg, stores, cond, batch_size=8)
+    rows.append(_ensemble_epoch(cfg, samples, cond, 8, "epoch_time/smoke"))
+    return rows
 
 
 if __name__ == "__main__":

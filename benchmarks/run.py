@@ -12,6 +12,7 @@ import traceback
 MODULES = [
     "benchmarks.data_description",     # Table I
     "benchmarks.variability_bands",    # Fig. 3 / Fig. 6
+    "benchmarks.ensemble_certify",     # §III-§IV end-to-end certification
     "benchmarks.generation_loss",      # Fig. 5
     "benchmarks.tolerance_search",     # Algorithm 1
     "benchmarks.psnr_distributions",   # Fig. 7 / Fig. 9

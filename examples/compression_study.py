@@ -17,7 +17,8 @@ import jax.numpy as jnp
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import MODEL_CFG, build_study, per_sim_series
-from repro.core import band_contains, compute_band, find_tolerance_batch
+from repro.core import band_verdict, compute_band, find_tolerance_batch
+from repro.core.ensemble import certify_tolerance
 from repro.data import ShardAwareLoader, ShardedCompressedStore
 from repro.core.pipeline import channels_last
 from repro.metrics import psnr, total_momentum
@@ -34,8 +35,9 @@ def main():
           f"ratio={meta['alg1_ratio']:.1f}x in {meta['alg1_iterations']} iters\n")
 
     raw = [per_sim_series(study, p) for p in study["raw_preds"]]
-    band = compute_band([np.asarray(total_momentum(jnp.asarray(r))[..., 1]).ravel()
-                         for r in raw])
+    raw_tr = [np.asarray(total_momentum(jnp.asarray(r))[..., 1]).ravel()
+              for r in raw]
+    band = compute_band(raw_tr)
     print("y-momentum variability band (paper Fig. 3): "
           f"mean width +/-2sigma = {2 * band.std.mean():.2f}")
     print(f"{'mult':>6} {'ratio':>8} {'inside band':>12} {'verdict'}")
@@ -43,9 +45,9 @@ def main():
                                  study["lossy_preds"]):
         traj = np.asarray(total_momentum(
             jnp.asarray(per_sim_series(study, pred)))[..., 1]).ravel()
-        ok, frac = band_contains(band, traj, frac_required=0.9)
-        verdict = "benign" if ok else "DEGRADED (over-compressed)"
-        print(f"{mult:>6g} {ratio:>7.1f}x {frac:>11.1%}  {verdict}")
+        v = band_verdict(band, raw_tr, traj, frac_required=0.9)
+        verdict = "benign" if v.benign else "DEGRADED (over-compressed)"
+        print(f"{mult:>6g} {ratio:>7.1f}x {v.inside_frac:>11.1%}  {verdict}")
 
     print("\nPSNR (density field), raw-model range vs lossy models:")
     test = study["test_nf"]
@@ -100,6 +102,30 @@ def main():
                     jax.tree_util.tree_leaves(resumed)))
     print(f"  kill@step5 + resume vs uninterrupted: "
           f"bit-identical params = {exact}")
+
+    # --- end-to-end certification (vmapped ensemble subsystem) -------------
+    # One call runs the whole paper pipeline on this data: 3-seed vmapped
+    # band ensemble, per-sample Algorithm-1 tolerances, every candidate
+    # multiple retrained in ONE vmapped sweep, band_verdict per metric.
+    print("\ncertify_tolerance (vmapped ensemble + lossy sweep):")
+    res = certify_tolerance(
+        MODEL_CFG, TrainConfig(epochs=3, batch_size=8, lr=1e-3, log_every=10),
+        study["test_cond"], test, eval_conditions=study["test_cond"],
+        eval_targets=test, seeds=(0, 1, 2), multiples=(0.5, 2.0, 16.0),
+        shard_size=16)
+    for c in res.candidates:
+        worst = max(c.per_metric.values(), key=lambda v: v.dev_vs_seeds)
+        print(f"  x{c.multiple:<4g} ratio={c.ratio:5.1f}x "
+              f"worst_dev={worst.dev_vs_seeds:5.2f} "
+              f"{'benign' if c.benign else 'DEGRADED'}")
+    mb = res.max_benign
+    print("  certified max benign: "
+          + ("none at these multiples (a 3-epoch model is far from "
+             "converged, so Algorithm 1's error bound already compresses "
+             "aggressively; see benchmarks/ensemble_certify.py --smoke for "
+             "a converged config that certifies x0.5)" if mb is None else
+             f"x{mb.multiple:g} at {mb.ratio:.1f}x compression "
+             f"({res.ensemble_seconds:.0f}s for the 3-seed vmapped band)"))
 
 
 if __name__ == "__main__":

@@ -3,28 +3,43 @@
   tolerance      -- Algorithm 1: model-centric compression error tolerance
                     (per-sample loop + single-jit batched search)
   variability    -- training-randomness bands (the +/-2 sigma yardstick)
+                    and the benign/degraded band_verdict criterion
+  ensemble       -- vmapped N-seed trainer (one jitted step advances every
+                    member) + certify_tolerance, the end-to-end max-benign-
+                    tolerance pipeline with persisted BandArtifacts
   pipeline       -- ArrayStore protocol + raw / per-sample-compressed stores
   grad_compress  -- beyond-paper: error-bounded gradient compression for DP
 
-The sharded many-samples-per-file store lives in repro.data.shards and is
-re-exported here lazily (it imports this package for IoStats, so an eager
+The sharded many-samples-per-file store lives in repro.data.shards, and the
+ensemble module imports the data/train layers; both are re-exported here
+lazily (they import this package for IoStats/pipeline pieces, so an eager
 import would be circular).
 """
 from repro.core.tolerance import (
     BatchToleranceResult, ToleranceResult, algorithm1_per_sample,
     find_tolerance, find_tolerance_batch,
 )
-from repro.core.variability import VariabilityBand, compute_band, band_contains
+from repro.core.variability import (
+    BandVerdict, VariabilityBand, band_contains, band_verdict, compute_band,
+    dev_vs_seeds, train_seed_ensemble,
+)
 from repro.core.pipeline import (
     ArrayStore, CompressedArrayStore, IoStats, RawArrayStore,
+)
+
+_ENSEMBLE_EXPORTS = (
+    "BandArtifact", "CandidateVerdict", "CertificationResult",
+    "EnsembleResult", "certify_tolerance", "ensemble_train_step",
+    "init_ensemble", "train_ensemble",
 )
 
 __all__ = [
     "BatchToleranceResult", "ToleranceResult", "algorithm1_per_sample",
     "find_tolerance", "find_tolerance_batch",
-    "VariabilityBand", "compute_band", "band_contains",
+    "BandVerdict", "VariabilityBand", "band_contains", "band_verdict",
+    "compute_band", "dev_vs_seeds", "train_seed_ensemble",
     "ArrayStore", "CompressedArrayStore", "IoStats", "RawArrayStore",
-    "ShardedCompressedStore",
+    "ShardedCompressedStore", *_ENSEMBLE_EXPORTS,
 ]
 
 
@@ -32,4 +47,7 @@ def __getattr__(name):
     if name == "ShardedCompressedStore":
         from repro.data.shards import ShardedCompressedStore
         return ShardedCompressedStore
+    if name in _ENSEMBLE_EXPORTS:
+        from repro.core import ensemble
+        return getattr(ensemble, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

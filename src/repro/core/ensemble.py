@@ -1,0 +1,480 @@
+"""Vmapped seed-ensemble training + end-to-end tolerance certification.
+
+The paper's central method (§III-§IV) needs N identically-configured models
+that differ only in seed (the variability band) plus one retrained model per
+candidate compression tolerance.  Run sequentially that is the repo's
+hottest multi-run path; here ONE jitted step advances all N members at once:
+
+  * params / optimizer state / batches carry a leading member axis and the
+    single-model ``value_and_grad + adam_update`` step is ``jax.vmap``-ed
+    over it, so N-seed wall-clock approaches a single run (measured by
+    ``benchmarks/epoch_time.py``);
+  * every member consumes exactly the batch stream an independent
+    ``train_surrogate`` run with the same seed would (per-member
+    ``(seed, epoch)`` permutations via ``EnsembleLoader``; equivalence is
+    asserted to tight numerical tolerance in tests/test_ensemble.py);
+  * batches for all members are fetched through the same
+    ArrayStore/PrefetchLoader stack as single-model training -- for a
+    shared store the union of member indices is read and decoded ONCE per
+    step, for per-member stores (one lossy store per tolerance candidate)
+    each member reads its own;
+  * per-epoch metric trajectories (L1, PSNR, total mass/momentum) stream
+    out of a vmapped eval, feeding ``compute_band`` and a persisted
+    ``BandArtifact`` (JSON manifest + npz arrays).
+
+``certify_tolerance`` drives the whole paper pipeline: train the raw-data
+seed ensemble, derive per-sample Algorithm-1 tolerances with
+``find_tolerance_batch``, build a ``ShardedCompressedStore`` per tolerance
+multiple, train ALL lossy candidates as one vmapped ensemble, and return
+the largest multiple whose trajectories stay within training randomness
+(``band_verdict``), with the achieved compression ratio -- paper Fig. 3/6
+as one function call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from functools import partial
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tolerance import find_tolerance_batch
+from repro.core.variability import (BandVerdict, VariabilityBand,
+                                    band_verdict, compute_band)
+from repro.data.loader import EnsembleLoader
+from repro.metrics import psnr, total_mass, total_momentum
+from repro.models.surrogate import (SurrogateConfig, apply_surrogate,
+                                    init_surrogate, l1_loss)
+from repro.train.loop import TrainConfig, batch_stream, make_getter, make_loader
+from repro.train.optimizer import AdamConfig, adam_init, adam_update
+
+TRAJECTORY_METRICS = ("l1", "psnr", "mass", "mom_x", "mom_y")
+
+
+# ---------------------------------------------------------------------------
+# vmapped ensemble: init / step / eval
+# ---------------------------------------------------------------------------
+
+def init_ensemble(model_cfg: SurrogateConfig, seeds: Sequence[int]):
+    """Stacked params pytree: leaf shapes (N, ...), member m == PRNGKey(seeds[m])."""
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    return jax.vmap(lambda k: init_surrogate(k, model_cfg))(keys)
+
+
+@partial(jax.jit, static_argnames=("cfg", "opt_cfg"))
+def ensemble_train_step(params, opt_state, cond, target, cfg: SurrogateConfig,
+                        opt_cfg: AdamConfig):
+    """One compiled step for all members: vmap of the single-model step.
+
+    cond: (N, B, cond_dim), target: (N, B, H, W, F); params/opt_state carry
+    the member axis on every leaf.  Returns (params, opt_state, (N,) loss).
+    """
+    def member(p, o, c, t):
+        loss, grads = jax.value_and_grad(l1_loss)(p, cfg, c, t)
+        p2, o2 = adam_update(grads, o, p, opt_cfg)
+        return p2, o2, loss
+
+    return jax.vmap(member)(params, opt_state, cond, target)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _eval_ensemble(params, cfg: SurrogateConfig, cond, targets):
+    """Per-member scalar metrics on a fixed eval set, one compiled dispatch.
+
+    Returns (N,) arrays: mean L1, mean per-sample-per-field PSNR, mean total
+    mass, mean total momentum (x and y) of the predictions.
+    """
+    def member(p):
+        pred = apply_surrogate(p, cfg, cond)
+        l1 = jnp.mean(jnp.abs(pred - targets))
+        ps = jnp.mean(psnr(targets, pred, axis=(-3, -2)))
+        mass = jnp.mean(total_mass(pred))
+        mom = jnp.mean(total_momentum(pred), axis=0)
+        return l1, ps, mass, mom[0], mom[1]
+
+    outs = jax.vmap(member)(params)
+    return dict(zip(TRAJECTORY_METRICS, outs))
+
+
+# ---------------------------------------------------------------------------
+# ensemble trainer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EnsembleResult:
+    params: object                          # stacked pytree, leading axis N
+    losses: list                            # [(step, (N,) loss), ...]
+    trajectories: dict                      # metric -> (N, n_evals)
+    seeds: list
+    seconds: float
+    steps: int
+
+    @property
+    def num_members(self) -> int:
+        return len(self.seeds)
+
+    def member_params(self, m: int):
+        return jax.tree_util.tree_map(lambda x: x[m], self.params)
+
+
+def train_ensemble(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
+                   conditions: np.ndarray,
+                   data: Union[Callable, object, Sequence],
+                   seeds: Sequence[int],
+                   num_samples: Optional[int] = None,
+                   eval_conditions=None, eval_targets=None,
+                   eval_every: int = 1,
+                   target_transform: Optional[Callable] = None,
+                   params=None,
+                   loader: Optional[EnsembleLoader] = None) -> EnsembleResult:
+    """Train N seed models simultaneously; returns an ``EnsembleResult``.
+
+    ``data`` is either ONE store/callable shared by all members (the paper's
+    seed ensemble: identical data, per-seed init + shuffle keys) or a
+    sequence of per-member stores (one lossy store per tolerance candidate
+    in ``certify_tolerance``).  For a shared store each step fetches the
+    union of the members' index batches once -- deduplicated read + decode
+    -- and scatters it back per member, so the data path stays one
+    ``get_batch`` per step regardless of N.
+
+    When ``eval_conditions``/``eval_targets`` are given, a vmapped eval runs
+    at the end of every ``eval_every``-th epoch and the per-member metric
+    trajectories (keys: l1, psnr, mass, mom_x, mom_y) stream into
+    ``result.trajectories`` as (N, n_evals) arrays -- the inputs to
+    ``compute_band`` / ``BandArtifact``.
+
+    ``loader`` overrides the auto-built per-seed ``EnsembleLoader`` (e.g.
+    ``certify_tolerance`` passes one so raw and lossy ensembles share the
+    exact batch order).  Checkpointing is not wired for ensembles; pass
+    ``ckpt_dir=None``.
+    """
+    if train_cfg.ckpt_dir is not None:
+        raise ValueError("ensemble training does not checkpoint; "
+                         "use train_surrogate for resumable single runs")
+    seeds = [int(s) for s in seeds]
+    per_member = isinstance(data, (list, tuple))
+    if per_member and len(data) != len(seeds):
+        raise ValueError(f"{len(data)} data sources for {len(seeds)} members")
+    sources = list(data) if per_member else [data] * len(seeds)
+    getters = [make_getter(s, target_transform) for s in sources]
+
+    if loader is None:
+        loader = EnsembleLoader([
+            make_loader(src, num_samples, train_cfg.batch_size, seed=s)
+            for src, s in zip(sources, seeds)])
+    elif loader.num_members != len(seeds):
+        raise ValueError(f"loader has {loader.num_members} members for "
+                         f"{len(seeds)} seeds")
+
+    conditions = jnp.asarray(conditions)
+    opt_cfg = AdamConfig(lr=train_cfg.lr)
+    if params is None:
+        params = init_ensemble(model_cfg, seeds)
+    opt_state = jax.vmap(lambda p: adam_init(p, opt_cfg))(params)
+
+    if per_member:
+        def fetch(idx_stack):
+            return (conditions[idx_stack],
+                    jnp.stack([g(idx_stack[m])
+                               for m, g in enumerate(getters)]))
+    else:
+        get = getters[0]
+
+        def fetch(idx_stack):
+            uniq, inv = np.unique(idx_stack, return_inverse=True)
+            batch = jnp.asarray(get(uniq))
+            return conditions[idx_stack], batch[inv.reshape(idx_stack.shape)]
+
+    do_eval = eval_conditions is not None and eval_targets is not None
+    if do_eval:
+        eval_cond = jnp.asarray(eval_conditions)
+        eval_tgt = jnp.asarray(eval_targets)
+    traj = {k: [] for k in TRAJECTORY_METRICS}
+    spe = loader.steps_per_epoch
+    losses = []
+    step = 0
+    t0 = time.time()
+    stream = batch_stream(loader, fetch, train_cfg.epochs, train_cfg.prefetch)
+    try:
+        for _lstate, (cond_b, tgt_b) in stream:
+            params, opt_state, loss = ensemble_train_step(
+                params, opt_state, cond_b, tgt_b, model_cfg, opt_cfg)
+            step += 1
+            if step % train_cfg.log_every == 0:
+                losses.append((step, np.asarray(loss)))
+            if do_eval and step % spe == 0 and (step // spe) % eval_every == 0:
+                vals = _eval_ensemble(params, model_cfg, eval_cond, eval_tgt)
+                for k in TRAJECTORY_METRICS:
+                    traj[k].append(np.asarray(vals[k]))
+            if train_cfg.max_steps is not None and step >= train_cfg.max_steps:
+                break
+    finally:
+        stream.close()
+    trajectories = {k: np.stack(v, axis=1) for k, v in traj.items() if v}
+    return EnsembleResult(params=params, losses=losses,
+                          trajectories=trajectories, seeds=seeds,
+                          seconds=time.time() - t0, steps=step)
+
+
+# ---------------------------------------------------------------------------
+# band artifact: persisted (JSON manifest + npz) seed-ensemble bands
+# ---------------------------------------------------------------------------
+
+BAND_FORMAT = "repro-band-v1"
+
+
+@dataclasses.dataclass
+class BandArtifact:
+    """Per-seed metric trajectories + the bands derived from them.
+
+    On disk (``save``/``load``):
+      root/band.json  -- format tag, seeds, sigmas, metric shape table,
+                         npz pointer, free-form meta
+      root/bands.npz  -- traj_<metric> (N, T), mean_<metric>, std_<metric>
+    """
+    trajectories: dict                       # metric -> (n_models, T)
+    seeds: list
+    sigmas: float = 2.0
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def metrics(self) -> list:
+        return sorted(self.trajectories)
+
+    def band(self, metric: str) -> VariabilityBand:
+        return compute_band(list(self.trajectories[metric]),
+                            sigmas=self.sigmas)
+
+    def verdict(self, metric: str, trajectory, frac_required: float = 0.9,
+                dev_allowance: float = 1.5) -> BandVerdict:
+        return band_verdict(self.band(metric),
+                            list(self.trajectories[metric]), trajectory,
+                            frac_required=frac_required,
+                            dev_allowance=dev_allowance)
+
+    def save(self, root: str) -> str:
+        os.makedirs(root, exist_ok=True)
+        arrays = {}
+        for name, t in self.trajectories.items():
+            b = self.band(name)
+            arrays[f"traj_{name}"] = np.asarray(t)
+            arrays[f"mean_{name}"] = np.asarray(b.mean)
+            arrays[f"std_{name}"] = np.asarray(b.std)
+        np.savez(os.path.join(root, "bands.npz"), **arrays)
+        manifest = {
+            "format": BAND_FORMAT,
+            "seeds": [int(s) for s in self.seeds],
+            "n_models": len(self.seeds),
+            "sigmas": float(self.sigmas),
+            "metrics": {k: list(np.asarray(v).shape)
+                        for k, v in self.trajectories.items()},
+            "npz": "bands.npz",
+            "meta": self.meta,
+        }
+        path = os.path.join(root, "band.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        return path
+
+    @classmethod
+    def load(cls, root: str) -> "BandArtifact":
+        with open(os.path.join(root, "band.json")) as f:
+            m = json.load(f)
+        if m.get("format") != BAND_FORMAT:
+            raise ValueError(f"unknown band artifact format {m.get('format')!r}")
+        with np.load(os.path.join(root, m["npz"])) as z:
+            trajectories = {k: np.array(z[f"traj_{k}"]) for k in m["metrics"]}
+        return cls(trajectories=trajectories, seeds=m["seeds"],
+                   sigmas=m["sigmas"], meta=m.get("meta", {}))
+
+
+# ---------------------------------------------------------------------------
+# certification: max benign tolerance via band containment
+# ---------------------------------------------------------------------------
+
+CERT_METRICS = ("mass", "mom_x", "mom_y", "psnr")
+
+
+@dataclasses.dataclass
+class CandidateVerdict:
+    multiple: float                    # tolerance multiple of the Alg-1 base
+    median_tolerance: float            # median per-sample L-inf tolerance
+    ratio: float                       # achieved compression ratio
+    benign: bool                       # benign on EVERY certified metric
+    per_metric: dict                   # metric -> BandVerdict
+
+
+@dataclasses.dataclass
+class CertificationResult:
+    model_l1_error: float              # e: Algorithm 1's model-error bound
+    base_tolerances: np.ndarray        # (n_train,) per-sample Alg-1 tolerances
+    candidates: list                   # CandidateVerdict, sorted by multiple
+    band: BandArtifact                 # raw seed-ensemble bands
+    ensemble_seconds: float            # raw N-seed vmapped training time
+    sweep_seconds: float               # lossy candidates + verdicts time
+
+    @property
+    def max_benign(self) -> Optional[CandidateVerdict]:
+        benign = [c for c in self.candidates if c.benign]
+        return max(benign, key=lambda c: c.multiple) if benign else None
+
+    def summary(self) -> dict:
+        mb = self.max_benign
+        return {
+            "model_l1_error": self.model_l1_error,
+            "candidates": [{
+                "multiple": c.multiple, "ratio": c.ratio, "benign": c.benign,
+                "median_tolerance": c.median_tolerance,
+                "per_metric": {k: dataclasses.asdict(v)
+                               for k, v in c.per_metric.items()},
+            } for c in self.candidates],
+            "max_benign_multiple": None if mb is None else mb.multiple,
+            "max_benign_tolerance": None if mb is None else mb.median_tolerance,
+            "max_benign_ratio": None if mb is None else mb.ratio,
+            "ensemble_seconds": self.ensemble_seconds,
+            "sweep_seconds": self.sweep_seconds,
+        }
+
+
+def _judge(band_art: BandArtifact, lossy_traj: dict, member: int,
+           multiple: float, store, metrics, frac_required: float,
+           dev_allowance: float) -> CandidateVerdict:
+    per_metric = {}
+    for name in metrics:
+        per_metric[name] = band_art.verdict(
+            name, lossy_traj[name][member],
+            frac_required=frac_required, dev_allowance=dev_allowance)
+    return CandidateVerdict(
+        multiple=float(multiple),
+        median_tolerance=float(np.median(store.tolerances)),
+        ratio=float(store.ratio),
+        benign=all(v.benign for v in per_metric.values()),
+        per_metric=per_metric)
+
+
+def certify_tolerance(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
+                      conditions: np.ndarray, train_fields: np.ndarray, *,
+                      eval_conditions, eval_targets,
+                      seeds: Sequence[int] = (0, 1, 2, 3),
+                      multiples: Sequence[float] = (0.5, 1.0, 2.0, 4.0, 8.0,
+                                                    16.0),
+                      metrics: Sequence[str] = CERT_METRICS,
+                      frac_required: float = 0.9, dev_allowance: float = 1.5,
+                      sigmas: float = 2.0, shard_size: int = 32,
+                      bisect_rounds: int = 0,
+                      lossy_seed: Optional[int] = None,
+                      artifact_dir: Optional[str] = None) -> CertificationResult:
+    """End-to-end paper pipeline: seed ensemble -> Algorithm 1 -> lossy sweep
+    -> max benign tolerance.
+
+    ``train_fields``: (n_train, H, W, F) normalized channels-last training
+    fields; ``conditions``: matching (n_train, cond_dim).  The eval set
+    supplies the metric trajectories that the band verdict compares.
+
+    Steps (each a single compiled fan-out, never a Python loop over runs):
+      1. vmapped raw seed ensemble -> per-epoch trajectories -> BandArtifact;
+      2. e = final-epoch mean L1 over members; per-sample Algorithm-1
+         tolerances for the WHOLE training set via ``find_tolerance_batch``;
+      3. one ``ShardedCompressedStore`` per tolerance multiple (per-sample
+         tolerances scaled by the multiple); ALL candidates train as one
+         vmapped ensemble with per-member stores;
+      4. per-candidate ``band_verdict`` on every certified metric; benign
+         requires every metric within training randomness;
+      5. optional geometric bisection between the largest benign and the
+         smallest degraded multiple (``bisect_rounds`` extra single-member
+         trainings) to tighten the certified edge.
+
+    Returns a ``CertificationResult``; ``result.max_benign`` carries the
+    certified multiple + achieved compression ratio (paper Fig. 3/6).  Pass
+    ``artifact_dir`` to persist the band artifact and a certification.json.
+    """
+    from repro.core.pipeline import RawArrayStore, channels_last
+    from repro.data.loader import ShardAwareLoader
+    from repro.data.shards import ShardedCompressedStore
+
+    train_fields = np.asarray(train_fields, np.float32)
+    n_train = len(train_fields)
+    if lossy_seed is None:
+        # retrain a BAND MEMBER's seed on the compressed data: as the
+        # tolerance goes to zero the lossy run converges to that member, so
+        # the verdict isolates compression effects from seed effects (the
+        # discriminating choice for small ensembles)
+        lossy_seed = int(seeds[0])
+
+    # every run (raw band members AND lossy candidates) draws batches through
+    # the same shard-aware layout, so two runs with the same seed consume the
+    # exact same batch order -- the convergence claim above needs this, since
+    # the lossy ShardedCompressedStore would otherwise get shard-granularity
+    # shuffling while the raw store got flat shuffling
+    def matched_loader(member_seeds):
+        return EnsembleLoader([
+            ShardAwareLoader(n_train, train_cfg.batch_size, shard_size,
+                             seed=int(s)) for s in member_seeds])
+
+    # 1) raw seed ensemble + bands
+    raw_store = RawArrayStore(train_fields)
+    ens = train_ensemble(model_cfg, train_cfg, conditions, raw_store, seeds,
+                         eval_conditions=eval_conditions,
+                         eval_targets=eval_targets,
+                         loader=matched_loader(seeds))
+    if not ens.trajectories:
+        raise ValueError("certification needs per-epoch trajectories; "
+                         "train for at least one full epoch")
+    band_art = BandArtifact(
+        trajectories=ens.trajectories, seeds=list(seeds), sigmas=sigmas,
+        meta={"epochs": train_cfg.epochs, "batch_size": train_cfg.batch_size,
+              "lr": train_cfg.lr, "n_train": n_train,
+              "eval_samples": int(np.asarray(eval_targets).shape[0])})
+
+    # 2) Algorithm 1: per-sample tolerances bounded by the model's own error
+    e_model = float(ens.trajectories["l1"][:, -1].mean())
+    samples_cf = np.ascontiguousarray(np.transpose(train_fields, (0, 3, 1, 2)))
+    base = find_tolerance_batch(samples_cf,
+                                np.full(n_train, e_model, np.float32))
+
+    def lossy_candidates(mults):
+        stores = [ShardedCompressedStore(
+            samples_cf, tolerances=base.tolerance * m, shard_size=shard_size)
+            for m in mults]
+        run = train_ensemble(
+            model_cfg, dataclasses.replace(train_cfg, seed=lossy_seed),
+            conditions, stores, [lossy_seed] * len(stores),
+            eval_conditions=eval_conditions, eval_targets=eval_targets,
+            target_transform=channels_last,
+            loader=matched_loader([lossy_seed] * len(stores)))
+        return [_judge(band_art, run.trajectories, m, mult, stores[m],
+                       metrics, frac_required, dev_allowance)
+                for m, mult in enumerate(mults)]
+
+    # 3+4) the sweep: every multiple trained in ONE vmapped ensemble
+    t0 = time.time()
+    candidates = lossy_candidates(list(multiples))
+
+    # 5) geometric bisection on the benign/degraded edge
+    for _ in range(bisect_rounds):
+        ordered = sorted(candidates, key=lambda c: c.multiple)
+        lo = max((c.multiple for c in ordered if c.benign), default=None)
+        hi = min((c.multiple for c in ordered
+                  if not c.benign and (lo is None or c.multiple > lo)),
+                 default=None)
+        if lo is None or hi is None or hi / lo < 1.1:
+            break
+        mid = float(np.sqrt(lo * hi))
+        candidates += lossy_candidates([mid])
+
+    candidates.sort(key=lambda c: c.multiple)
+    result = CertificationResult(
+        model_l1_error=e_model, base_tolerances=base.tolerance,
+        candidates=candidates, band=band_art,
+        ensemble_seconds=ens.seconds, sweep_seconds=time.time() - t0)
+
+    if artifact_dir is not None:
+        band_art.save(artifact_dir)
+        with open(os.path.join(artifact_dir, "certification.json"), "w") as f:
+            json.dump(result.summary(), f, indent=1)
+    return result

@@ -1,6 +1,6 @@
-from repro.data.loader import (PrefetchLoader, ShardAwareLoader,
-                               ShardedLoader)
+from repro.data.loader import (EnsembleLoader, PrefetchLoader,
+                               ShardAwareLoader, ShardedLoader)
 from repro.data.shards import ShardedCompressedStore
 
 __all__ = ["ShardedLoader", "ShardAwareLoader", "PrefetchLoader",
-           "ShardedCompressedStore"]
+           "EnsembleLoader", "ShardedCompressedStore"]

@@ -10,12 +10,17 @@ Production semantics at container scale:
     device step, the standard straggler mitigation for input-bound steps;
     a bounded queue caps skip-ahead so a stalled consumer cannot be
     overrun (backpressure).
+  * EnsembleLoader -- N per-seed loaders advanced in lockstep, yielding
+    stacked (N, B) index batches for the vmapped seed-ensemble trainer
+    (repro.core.ensemble): every member sees its own (seed, epoch)
+    permutation of the same dataset, exactly what N independent
+    train_surrogate runs would consume.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator, Optional
+from typing import Callable, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -76,6 +81,11 @@ class ShardedLoader:
     def take(self, k: int):
         it = iter(self)
         return [next(it) for _ in range(k)]
+
+    @property
+    def steps_per_epoch(self) -> int:
+        owned = -(-(self.n - self.host_id) // self.num_hosts)
+        return owned // self.bs if self.drop_remainder else -(-owned // self.bs)
 
 
 class ShardAwareLoader(ShardedLoader):
@@ -147,6 +157,63 @@ class ShardAwareLoader(ShardedLoader):
             rng.shuffle(idx)
             chunks.append(idx)
         return np.concatenate(chunks) if chunks else np.empty(0, np.int64)
+
+
+class EnsembleLoader:
+    """N per-seed loaders advanced in lockstep: one draw yields (N, B) indices.
+
+    Each member loader orders the SAME dataset under its own seed (the
+    paper's seed-ensemble setup: identical data and hyperparameters,
+    per-seed shuffling), so member m's index stream is bit-identical to
+    what ``ShardedLoader(n, bs, seed=seeds[m])`` feeds an independent
+    ``train_surrogate`` run -- the equivalence the vmapped ensemble trainer
+    is tested against.  All members must agree on steps-per-epoch
+    (guaranteed when they share n / batch_size / host split; asserted).
+    """
+
+    def __init__(self, loaders: Sequence):
+        if not loaders:
+            raise ValueError("EnsembleLoader needs at least one member loader")
+        spes = {ld.steps_per_epoch for ld in loaders}
+        if len(spes) != 1:
+            # zip(*its) would silently truncate every member's epoch to the
+            # shortest stream -- fail loudly instead
+            raise ValueError(f"members disagree on steps/epoch: {sorted(spes)}")
+        self.loaders = list(loaders)
+
+    @property
+    def num_members(self) -> int:
+        return len(self.loaders)
+
+    @property
+    def seeds(self) -> list:
+        return [ld.seed for ld in self.loaders]
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return self.loaders[0].steps_per_epoch
+
+    # -- state: members run in lockstep, so (epoch, step) are shared ---------
+    def state(self) -> dict:
+        lead = self.loaders[0].state()
+        return {"epoch": lead["epoch"], "step_in_epoch": lead["step_in_epoch"],
+                "seeds": list(self.seeds)}
+
+    def restore(self, state: dict) -> None:
+        if len(state["seeds"]) != len(self.loaders):
+            raise ValueError(f"state carries {len(state['seeds'])} seeds for "
+                             f"{len(self.loaders)} members")
+        for ld, seed in zip(self.loaders, state["seeds"]):
+            ld.restore({"epoch": state["epoch"],
+                        "step_in_epoch": state["step_in_epoch"], "seed": seed})
+
+    def iter_epochs(self, max_epochs: Optional[int] = None) -> Iterator[np.ndarray]:
+        its = [ld.iter_epochs(max_epochs) for ld in self.loaders]
+        for batches in zip(*its):
+            yield np.stack(batches)
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        return self.iter_epochs(None)
 
 
 class PrefetchLoader:

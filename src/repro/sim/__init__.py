@@ -9,8 +9,10 @@ from repro.sim.solver import SimParams, run_simulation, FIELD_NAMES
 from repro.sim.ensemble import (
     EnsembleSpec, RT_SPEC, PCHIP_SPEC, generate_ensemble, sample_params,
 )
+from repro.sim.synthetic import synthetic_study
 
 __all__ = [
     "SimParams", "run_simulation", "FIELD_NAMES",
     "EnsembleSpec", "RT_SPEC", "PCHIP_SPEC", "generate_ensemble", "sample_params",
+    "synthetic_study",
 ]

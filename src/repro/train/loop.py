@@ -19,6 +19,10 @@ post-resume entries bit-for-bit (asserted in tests/test_resume.py).  This is the
 precondition for the paper's §III variability bands: restart noise would
 otherwise pollute the run-to-run spread that serves as the compression
 yardstick.
+
+``make_loader`` and ``batch_stream`` are the building blocks shared with
+the vmapped N-seed ensemble trainer (repro.core.ensemble), which advances
+every seed model with one jitted step over the same store/loader stack.
 """
 from __future__ import annotations
 
@@ -59,16 +63,63 @@ def _train_step(params, opt_state, cond, target, cfg: SurrogateConfig,
     return params, opt_state, loss
 
 
-def _make_loader(data, num_samples: Optional[int],
-                 train_cfg: "TrainConfig") -> ShardedLoader:
+def make_getter(data, target_transform: Optional[Callable] = None) -> Callable:
+    """Batch getter for a data source: ``ArrayStore.get_batch`` or a legacy
+    ``idx -> batch`` callable, optionally post-processed by
+    ``target_transform``.  The single implementation of the data-source seam,
+    shared by ``train_surrogate`` and the ensemble trainer.
+    """
+    get = data.get_batch if hasattr(data, "get_batch") else data
+    if target_transform is not None:
+        get = (lambda base: lambda idx: target_transform(base(idx)))(get)
+    return get
+
+
+def make_loader(data, num_samples: Optional[int], batch_size: int,
+                seed: int) -> ShardedLoader:
+    """Loader matched to a data source: shard-aware for sharded stores,
+    plain ``ShardedLoader`` otherwise.  Shared by ``train_surrogate`` and
+    the per-member loaders of ``repro.core.ensemble.train_ensemble``, so a
+    single-run and an ensemble member with the same seed consume identical
+    batch streams.
+    """
     n = getattr(data, "num_samples", num_samples)
     if n is None:
         raise ValueError("num_samples is required when the data source is a "
                          "callable rather than an ArrayStore")
     if hasattr(data, "shard_size"):  # align batches with the shard layout
-        return ShardAwareLoader.for_store(data, train_cfg.batch_size,
-                                          seed=train_cfg.seed)
-    return ShardedLoader(n, train_cfg.batch_size, seed=train_cfg.seed)
+        return ShardAwareLoader.for_store(data, batch_size, seed=seed)
+    return ShardedLoader(n, batch_size, seed=seed)
+
+
+def batch_stream(loader, fetch: Callable, epochs: Optional[int],
+                 prefetch: int):
+    """Yield ``(loader_state_at_draw, fetch(idx))`` for every batch.
+
+    The single stream assembly behind ``train_surrogate`` and
+    ``train_ensemble``: snapshots the loader state when each batch is drawn
+    (the exact-resume contract -- with prefetch the live loader runs ahead
+    of consumption) and, when ``prefetch > 0``, runs ``fetch`` on a
+    ``PrefetchLoader`` worker thread so host read + decode overlaps the
+    jitted step.  The generator's ``close()`` (or garbage collection) shuts
+    the worker down, so abandoning iteration never leaks the thread.
+    """
+    def _snapshots():
+        for idx in loader.iter_epochs(epochs):
+            yield dict(loader.state()), idx
+
+    def _fetch(item):
+        lstate, idx = item
+        return lstate, fetch(idx)
+
+    if prefetch > 0:
+        pl = PrefetchLoader(_snapshots(), _fetch, depth=prefetch)
+        try:
+            yield from pl
+        finally:
+            pl.close()
+    else:
+        yield from map(_fetch, _snapshots())
 
 
 def _save(train_cfg: "TrainConfig", step: int, params, opt_state,
@@ -96,16 +147,15 @@ def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     channels-last model).  ``loader`` overrides the auto-built one -- pass a
     ``ShardAwareLoader`` with host_id/num_hosts for multi-host training.
     """
-    get_targets = data.get_batch if hasattr(data, "get_batch") else data
-    if target_transform is not None:
-        get_targets = (lambda base: lambda idx: target_transform(base(idx)))(get_targets)
+    get_targets = make_getter(data, target_transform)
     opt_cfg = AdamConfig(lr=train_cfg.lr)
     key = jax.random.PRNGKey(train_cfg.seed)
     if params is None:
         params = init_surrogate(key, model_cfg)
     opt_state = adam_init(params, opt_cfg)
     if loader is None:
-        loader = _make_loader(data, num_samples, train_cfg)
+        loader = make_loader(data, num_samples, train_cfg.batch_size,
+                             train_cfg.seed)
 
     step = 0
     if train_cfg.ckpt_dir:
@@ -130,20 +180,13 @@ def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     # carries the state snapshot taken when it was drawn.
     last_state = dict(loader.state())
 
-    def _snapshots():
-        for idx in loader.iter_epochs(train_cfg.epochs):
-            yield dict(loader.state()), idx
-
-    def _fetch(item):
-        lstate, idx = item
-        return lstate, conditions[idx], get_targets(idx)
-
-    stream = (PrefetchLoader(_snapshots(), _fetch, depth=train_cfg.prefetch)
-              if train_cfg.prefetch > 0 else map(_fetch, _snapshots()))
+    stream = batch_stream(loader,
+                          lambda idx: (conditions[idx], get_targets(idx)),
+                          train_cfg.epochs, train_cfg.prefetch)
     losses = []
     saved_step = -1
     try:
-        for lstate, cond, target in stream:
+        for lstate, (cond, target) in stream:
             params, opt_state, loss = _train_step(
                 params, opt_state, cond, target, model_cfg, opt_cfg)
             step += 1
@@ -159,8 +202,7 @@ def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
             if train_cfg.max_steps is not None and step >= train_cfg.max_steps:
                 return params, losses   # preempted: no final save
     finally:
-        if isinstance(stream, PrefetchLoader):
-            stream.close()
+        stream.close()
     if train_cfg.ckpt_dir and step != saved_step:
         _save(train_cfg, step, params, opt_state, last_state)
     return params, losses

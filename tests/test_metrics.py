@@ -1,0 +1,151 @@
+"""Metric semantics on known analytic fields (metrics/image + metrics/physics).
+
+Pins the PSNR per-sample peak convention (dynamic range of the REFERENCE,
+clamped mse => finite capped value for perfect reconstruction, broadcasting
+over leading/channel axes) and the conservation metrics' closed forms.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.metrics import (mixing_layer_thickness, psnr,
+                           timeseries_correlation, total_mass, total_momentum)
+
+
+# ---------------------------------------------------------------------------
+# psnr
+# ---------------------------------------------------------------------------
+
+def _grid(h=16, w=16, lo=0.0, hi=1.0):
+    return np.linspace(lo, hi, h * w, dtype=np.float32).reshape(h, w)
+
+
+def test_psnr_known_value():
+    """Constant error c on a reference with range R: psnr = 20 log10(R/c)."""
+    ref = jnp.asarray(_grid(lo=0.0, hi=2.0))        # R = 2
+    test = ref + 0.02                               # mse = 4e-4
+    val = float(psnr(ref, test))
+    assert val == pytest.approx(20 * np.log10(2.0 / 0.02), rel=1e-5)
+
+
+def test_psnr_perfect_reconstruction_is_capped():
+    """mse is clamped at 1e-20, so identical fields give a finite cap that
+    depends only on the reference's dynamic range."""
+    a = jnp.asarray(_grid(lo=0.0, hi=1.0))
+    b = jnp.asarray(_grid(lo=3.0, hi=4.0))          # same range, other values
+    cap = 10 * np.log10(1.0 / 1e-20)                # peak=1 => 200 dB
+    va, vb = float(psnr(a, a)), float(psnr(b, b))
+    assert np.isfinite(va) and np.isfinite(vb)
+    assert va == pytest.approx(cap, rel=1e-6)
+    assert va == pytest.approx(vb, rel=1e-6)        # cap set by range alone
+
+
+def test_psnr_constant_reference_field():
+    """Zero-range reference: peak clamps to 1e-12 instead of dividing by 0."""
+    ref = jnp.full((8, 8), 3.5)
+    val = float(psnr(ref, ref))
+    assert np.isfinite(val)                          # no nan/inf
+    assert val == pytest.approx(10 * np.log10(1e-24 / 1e-20), rel=1e-6)
+    noisy = float(psnr(ref, ref + 0.1))
+    assert np.isfinite(noisy) and noisy < val
+
+
+def test_psnr_per_sample_peak_convention():
+    """Peak is PER SAMPLE over the reduced axes: scaling one sample's
+    reference range rescales only that sample's psnr."""
+    base = _grid()
+    ref = jnp.asarray(np.stack([base, 10 * base]))   # ranges 1 and 10
+    test = ref + 0.01
+    vals = np.asarray(psnr(ref, test))
+    assert vals.shape == (2,)
+    assert vals[1] == pytest.approx(vals[0] + 20.0, abs=1e-3)  # 20 log10(10)
+
+
+def test_psnr_broadcasts_over_channels():
+    """(H, W) reference vs (C, H, W) test broadcasts to per-channel values."""
+    ref = jnp.asarray(_grid())
+    errs = np.array([0.01, 0.04, 0.16], np.float32)
+    test = ref[None] + jnp.asarray(errs)[:, None, None]
+    vals = np.asarray(psnr(ref, test))
+    assert vals.shape == (3,)
+    expected = 20 * np.log10(1.0 / errs)
+    assert np.allclose(vals, expected, rtol=1e-5)
+    # leading batch/field axes reduce independently too
+    stack = jnp.asarray(np.stack([_grid(), _grid(lo=0, hi=2)]))
+    out = np.asarray(psnr(stack[:, None], stack[:, None] + 0.1))
+    assert out.shape == (2, 1)
+
+
+# ---------------------------------------------------------------------------
+# conservation metrics (paper Eqs. 2-3) on analytic fields
+# ---------------------------------------------------------------------------
+
+def test_total_mass_closed_form():
+    h, w = 12, 8
+    fields = np.zeros((h, w, 6), np.float32)
+    fields[..., 0] = 1.75
+    assert float(total_mass(jnp.asarray(fields))) == pytest.approx(1.75 * h * w)
+    assert float(total_mass(jnp.asarray(fields), cell_area=0.5)) == \
+        pytest.approx(0.5 * 1.75 * h * w)
+
+
+def test_total_mass_batch_axes():
+    fields = np.zeros((3, 5, 4, 4, 6), np.float32)   # (sims, T, H, W, F)
+    fields[..., 0] = np.arange(1, 4, dtype=np.float32)[:, None, None, None]
+    m = np.asarray(total_mass(jnp.asarray(fields)))
+    assert m.shape == (3, 5)
+    assert np.allclose(m, np.arange(1, 4)[:, None] * 16)
+
+
+def test_total_momentum_closed_form():
+    h, w = 10, 6
+    fields = np.zeros((h, w, 6), np.float32)
+    rho = _grid(h, w, lo=1.0, hi=2.0)                # spatially varying
+    fields[..., 0] = rho
+    fields[..., 1] = 3.0
+    fields[..., 2] = -1.0
+    p = np.asarray(total_momentum(jnp.asarray(fields)))
+    assert p.shape == (2,)
+    assert p[0] == pytest.approx(3.0 * rho.sum(), rel=1e-5)
+    assert p[1] == pytest.approx(-1.0 * rho.sum(), rel=1e-5)
+
+
+def test_momentum_weighted_by_density_not_uniform():
+    """p = sum(rho * v): concentrating density where v is largest must beat
+    the uniform-density value with the same total mass."""
+    h, w = 8, 8
+    v = np.zeros((h, w), np.float32)
+    v[:, : w // 2] = 1.0                             # velocity on the left
+    uniform = np.zeros((h, w, 6), np.float32)
+    uniform[..., 0] = 1.0
+    uniform[..., 1] = v
+    skewed = uniform.copy()
+    skewed[..., 0] = 0.0
+    skewed[:, : w // 2, 0] = 2.0                     # same mass, co-located
+    pu = float(total_momentum(jnp.asarray(uniform))[0])
+    ps = float(total_momentum(jnp.asarray(skewed))[0])
+    assert float(total_mass(jnp.asarray(uniform))) == \
+        pytest.approx(float(total_mass(jnp.asarray(skewed))))
+    assert ps == pytest.approx(2 * pu, rel=1e-6)
+
+
+def test_mixing_layer_thickness_analytic_midpoint():
+    """A linear ramp between rho1 and rho2 gives h = H/2 exactly:
+    integral |rho_bar - mid| dy = (rho2-rho1) H/4 for the symmetric ramp."""
+    h, w = 256, 4
+    rho1, rho2 = 1.0, 3.0
+    ramp = np.linspace(rho1, rho2, h, dtype=np.float32)
+    fields = np.zeros((h, w, 6), np.float32)
+    fields[..., 0] = ramp[:, None]
+    val = float(mixing_layer_thickness(jnp.asarray(fields), rho1, rho2))
+    assert val == pytest.approx(h / 2, rel=2e-2)
+
+
+def test_timeseries_correlation_shift_invariance():
+    t = np.linspace(0, 5, 64)
+    a = jnp.asarray(np.sin(t))
+    assert float(timeseries_correlation(a, 3.0 * a + 7.0)) == \
+        pytest.approx(1.0, abs=1e-5)
+    # orthogonal-ish signals decorrelate
+    b = jnp.asarray(np.sin(8 * t))
+    assert abs(float(timeseries_correlation(a, b))) < 0.3

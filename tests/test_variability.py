@@ -1,0 +1,177 @@
+"""Property/statistical battery for the §III band math (core.variability).
+
+The band is the paper's yardstick for everything: these tests pin the
+semantics of compute_band / band_contains / dev_vs_seeds / band_verdict on
+(T,) and (T, K) shapes, degenerate zero-sigma bands, sigmas / frac_required
+edge cases, the shape-mismatch ValueError, and the statistical behaviour of
+the +/-2 sigma criterion under actual Gaussian seed noise.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BandVerdict, VariabilityBand, band_contains,
+                        band_verdict, compute_band, dev_vs_seeds)
+
+
+# ---------------------------------------------------------------------------
+# compute_band: shapes and moments
+# ---------------------------------------------------------------------------
+
+def test_compute_band_1d_moments():
+    trajs = [np.full(10, 1.0), np.full(10, 3.0)]
+    band = compute_band(trajs)
+    assert band.mean.shape == (10,)
+    assert np.allclose(band.mean, 2.0)
+    assert np.allclose(band.std, 1.0)
+    assert band.n_models == 2
+    assert np.allclose(band.lo, 0.0) and np.allclose(band.hi, 4.0)
+
+
+def test_compute_band_2d_shapes():
+    rng = np.random.default_rng(0)
+    trajs = [rng.standard_normal((12, 3)) for _ in range(6)]
+    band = compute_band(trajs)
+    assert band.mean.shape == (12, 3) and band.std.shape == (12, 3)
+    stack = np.stack(trajs)
+    assert np.allclose(band.mean, stack.mean(0))
+    assert np.allclose(band.std, stack.std(0))
+
+
+def test_sigmas_scales_band_width():
+    trajs = [np.zeros(5), np.ones(5)]
+    narrow = compute_band(trajs, sigmas=1.0)
+    wide = compute_band(trajs, sigmas=3.0)
+    assert np.all(wide.hi - wide.lo > narrow.hi - narrow.lo)
+    # sigmas=0 collapses the band onto the mean
+    point = compute_band(trajs, sigmas=0.0)
+    assert np.allclose(point.lo, point.hi)
+    ok, frac = band_contains(point, point.mean)
+    assert ok and frac == 1.0
+
+
+# ---------------------------------------------------------------------------
+# band_contains: containment fractions and edge cases
+# ---------------------------------------------------------------------------
+
+def test_band_contains_fraction_exact():
+    band = VariabilityBand(mean=np.zeros(10), std=np.ones(10), n_models=5)
+    traj = np.zeros(10)
+    traj[:3] = 100.0                       # exactly 3 of 10 points outside
+    ok, frac = band_contains(band, traj, frac_required=0.7)
+    assert ok and frac == pytest.approx(0.7)
+    ok, _ = band_contains(band, traj, frac_required=0.71)
+    assert not ok
+
+
+def test_band_contains_frac_required_edges():
+    band = VariabilityBand(mean=np.zeros(4), std=np.ones(4), n_models=3)
+    everywhere_out = np.full(4, 1e6)
+    ok, frac = band_contains(band, everywhere_out, frac_required=0.0)
+    assert ok and frac == 0.0              # frac_required=0: always passes
+    boundary = band.hi                     # points ON the edge count inside
+    ok, frac = band_contains(band, boundary, frac_required=1.0)
+    assert ok and frac == 1.0
+
+
+def test_band_contains_degenerate_zero_sigma():
+    trajs = [np.linspace(0, 1, 8)] * 4     # identical seeds: std == 0
+    band = compute_band(trajs)
+    assert np.allclose(band.std, 0.0)
+    ok, frac = band_contains(band, trajs[0])
+    assert ok and frac == 1.0              # the mean itself is inside
+    ok, frac = band_contains(band, trajs[0] + 1e-6)
+    assert not ok and frac == 0.0          # any deviation leaves a 0-width band
+
+
+def test_band_contains_2d_trajectory():
+    rng = np.random.default_rng(1)
+    trajs = [rng.standard_normal((20, 2)) * 0.1 for _ in range(8)]
+    band = compute_band(trajs)
+    ok, frac = band_contains(band, trajs[0], frac_required=0.5)
+    assert ok
+    ok2, frac2 = band_contains(band, trajs[0] + 10.0)
+    assert not ok2 and frac2 == 0.0
+
+
+def test_band_contains_shape_mismatch_raises():
+    band = VariabilityBand(mean=np.zeros(10), std=np.ones(10), n_models=5)
+    with pytest.raises(ValueError, match="does not match band shape"):
+        band_contains(band, np.zeros(9))
+    with pytest.raises(ValueError, match="does not match band shape"):
+        band_contains(band, np.zeros((10, 2)))   # would broadcast silently
+    band2 = VariabilityBand(mean=np.zeros((10, 3)), std=np.ones((10, 3)),
+                            n_models=5)
+    with pytest.raises(ValueError, match="does not match band shape"):
+        band_contains(band2, np.zeros(10))       # (10,) vs (10, 3)
+
+
+# ---------------------------------------------------------------------------
+# dev_vs_seeds + band_verdict: the small-ensemble criterion
+# ---------------------------------------------------------------------------
+
+def test_dev_vs_seeds_reference_values():
+    trajs = [np.zeros(6), np.full(6, 2.0)]   # mean 1, worst seed dev 1
+    band = compute_band(trajs)
+    assert dev_vs_seeds(band, trajs, np.full(6, 1.0)) == pytest.approx(0.0)
+    assert dev_vs_seeds(band, trajs, np.full(6, 2.5)) == pytest.approx(1.5)
+    assert dev_vs_seeds(band, trajs, np.full(6, -2.0)) == pytest.approx(3.0)
+
+
+def test_dev_vs_seeds_degenerate_seeds_guard():
+    trajs = [np.ones(4)] * 3                 # all seeds identical: dev 0
+    band = compute_band(trajs)
+    # guard denominator: any deviation is "infinitely" many seed-devs away
+    assert dev_vs_seeds(band, trajs, np.ones(4) + 1e-3) > 1e3
+    with pytest.raises(ValueError):
+        dev_vs_seeds(band, trajs, np.ones(5))
+
+
+def test_band_verdict_matches_inline_criterion():
+    """band_verdict reproduces the criterion formerly inlined in
+    benchmarks/variability_bands.py: benign == (dev <= 1.5 or frac >= 0.9)."""
+    rng = np.random.default_rng(2)
+    raw = [np.sin(np.linspace(0, 3, 50)) + 0.05 * rng.standard_normal(50)
+           for _ in range(5)]
+    band = compute_band(raw)
+    seed_dev = max(np.abs(t - band.mean).max() for t in raw)
+    for shift in (0.0, 0.03, 0.2, 1.0):
+        traj = raw[0] + shift
+        v = band_verdict(band, raw, traj, frac_required=0.9,
+                         dev_allowance=1.5)
+        _, frac = band_contains(band, traj, 0.9)
+        dev = np.abs(traj - band.mean).max() / max(seed_dev, 1e-9)
+        assert isinstance(v, BandVerdict)
+        assert v.inside_frac == pytest.approx(frac)
+        assert v.dev_vs_seeds == pytest.approx(dev)
+        assert v.benign == (dev <= 1.5 or frac >= 0.9)
+    assert band_verdict(band, raw, raw[0]).benign
+    assert not band_verdict(band, raw, raw[0] + 10.0).benign
+
+
+# ---------------------------------------------------------------------------
+# statistical behaviour under actual Gaussian seed noise
+# ---------------------------------------------------------------------------
+
+def test_two_sigma_band_statistics():
+    """A fresh same-distribution trajectory lands inside a large-N +/-2 sigma
+    band ~95% of the time; a 5-sigma-shifted one essentially never."""
+    rng = np.random.default_rng(3)
+    T, n_seeds = 400, 64
+    trajs = [rng.standard_normal(T) for _ in range(n_seeds)]
+    band = compute_band(trajs)
+    fresh = rng.standard_normal(T)
+    _, frac = band_contains(band, fresh)
+    assert 0.90 < frac <= 1.0              # ~0.954 in expectation
+    _, frac_shift = band_contains(band, fresh + 5.0)
+    assert frac_shift < 0.05
+    # one-sigma band: ~68% of points inside
+    band1 = compute_band(trajs, sigmas=1.0)
+    _, frac1 = band_contains(band1, fresh)
+    assert 0.55 < frac1 < 0.80
+
+
+def test_band_width_scales_with_seed_noise():
+    rng = np.random.default_rng(4)
+    small = compute_band([0.01 * rng.standard_normal(30) for _ in range(12)])
+    large = compute_band([1.00 * rng.standard_normal(30) for _ in range(12)])
+    assert large.std.mean() > small.std.mean() * 10
