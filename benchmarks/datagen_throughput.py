@@ -1,0 +1,123 @@
+"""Streaming datagen throughput: sequential vs overlapped production.
+
+Measures ``repro.datagen.produce`` end to end (jitted spectral solver ->
+on-device batched ZFP encode -> sharded store) two ways over the same plan:
+
+  * sequential  -- ``overlap=False``: simulate, encode, transfer and write
+                   each chunk inline, one after the other;
+  * overlapped  -- the bounded-queue ``ShardWriter`` worker runs
+                   device->host transfer + (throttled) shard IO while the
+                   producer dispatches the next member's simulation/encode.
+
+Disk writes are throttled to an emulated shared-file-system bandwidth
+calibrated from an unthrottled warmup run so IO time is comparable to
+compute time -- the regime the paper's production runs live in (compute
+cluster writing to parallel FS), where overlap pays.  Reports samples/sec
+for both paths, the overlap speedup, and the realized compression ratio
+per scenario.
+
+``--smoke`` runs a seconds-scale single-scenario plan; CI uses it to
+exercise the full simulate->encode->async-write->finalize pipeline (and the
+>= 1.5x overlap win) on every PR.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+
+import os
+
+from repro.datagen import (CodecPlan, ProductionPlan, ScenarioPlan, produce,
+                           resolve_store)
+from repro.sim.ensemble import EnsembleSpec
+
+SMOKE_PLAN = ProductionPlan(
+    scenarios=(ScenarioPlan(
+        "rt", EnsembleSpec(name="rt", ny=24, nx=8, nsnaps=12, nsteps=600),
+        num_sims=8, seed=0),),
+    codec=CodecPlan(tolerance=1e-3), shard_size=8)
+
+FULL_PLAN = ProductionPlan(
+    scenarios=(
+        ScenarioPlan("rt", EnsembleSpec(name="rt", ny=48, nx=16, nsnaps=17,
+                                        nsteps=500),
+                     num_sims=6, seed=0),
+        ScenarioPlan("pchip", EnsembleSpec(name="pchip", ny=32, nx=32,
+                                           nsnaps=17, nsteps=400, pchip=True),
+                     num_sims=4, seed=1),
+    ),
+    codec=CodecPlan(tolerance=1e-3), shard_size=16)
+
+
+def _produce_fresh(plan, root, **kw):
+    shutil.rmtree(root, ignore_errors=True)
+    return produce(plan, root, **kw)
+
+
+def measure(plan: ProductionPlan, tag: str, tmp_root: str):
+    """Warmup (calibrates emulated FS bandwidth + compiles), then time
+    sequential vs overlapped production of identical stores."""
+    rows = []
+    _produce_fresh(plan, os.path.join(tmp_root, "warm"))   # jit compile
+    for sc in plan.scenarios:
+        one = ProductionPlan(scenarios=(sc,), codec=plan.codec,
+                             shard_size=plan.shard_size)
+        # post-compile unthrottled run = pure compute+transfer time; pick a
+        # bandwidth such that shard IO time ~= that compute time: IO heavy
+        # enough that overlap matters, the regime the paper's file systems
+        # (workspace/VAST/GPFS) sit in
+        cal = _produce_fresh(one, os.path.join(tmp_root, "cal"),
+                             overlap=False).scenarios[0]
+        bw_mbs = cal.bytes_written / 1e6 / max(cal.seconds, 1e-9)
+
+        def best_of(overlap, reps=2):           # min wall-clock, like timeit
+            return min((_produce_fresh(one, os.path.join(tmp_root, "run"),
+                                       overlap=overlap,
+                                       bandwidth_mbs=bw_mbs).scenarios[0]
+                        for _ in range(reps)), key=lambda r: r.seconds)
+
+        seq = best_of(False)
+        ovl = best_of(True)
+        seq_sps = seq.samples_produced / max(seq.seconds, 1e-9)
+        ovl_sps = ovl.samples_produced / max(ovl.seconds, 1e-9)
+        speedup = ovl_sps / max(seq_sps, 1e-9)
+        ratio = resolve_store(ovl.store_dir).ratio
+        rows.append((
+            f"{tag}/{sc.name}", ovl.seconds * 1e6,
+            f"seq={seq_sps:.1f}sps overlap={ovl_sps:.1f}sps "
+            f"speedup={speedup:.2f}x ratio={ratio:.1f}x "
+            f"bw={bw_mbs:.2f}MB/s shards={ovl.shards_written} "
+            f"{'(>=1.5x)' if speedup >= 1.5 else '(UNDER 1.5x)'}"))
+    return rows
+
+
+def run(tmp_root: str = None):
+    with tempfile.TemporaryDirectory() as td:
+        return measure(FULL_PLAN, "datagen_throughput", tmp_root or td)
+
+
+def run_smoke(tmp_root: str = None):
+    with tempfile.TemporaryDirectory() as td:
+        return measure(SMOKE_PLAN, "datagen_throughput/smoke", tmp_root or td)
+
+
+def _under_threshold(rows):
+    return [r[0] for r in rows if "(UNDER 1.5x)" in r[2]]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale single-scenario plan (used in CI); "
+                         "exits non-zero if overlap stays under 1.5x")
+    args = ap.parse_args()
+    rows = run_smoke() if args.smoke else run()
+    if args.smoke and _under_threshold(rows):
+        rows = run_smoke()                   # one retry absorbs a noisy box
+    for r in rows:
+        print(",".join(map(str, r)))
+    if args.smoke and _under_threshold(rows):
+        raise SystemExit(f"overlap speedup under 1.5x for "
+                         f"{_under_threshold(rows)}: the async writer is "
+                         "no longer overlapping IO with simulation/encode")

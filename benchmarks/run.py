@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.psnr_distributions",   # Fig. 7 / Fig. 9
     "benchmarks.mixing_layer",         # Fig. 8
     "benchmarks.loading_throughput",   # Fig. 11
+    "benchmarks.datagen_throughput",   # streaming produce: seq vs overlapped
     "benchmarks.epoch_time",           # Fig. 12
     "benchmarks.kernel_throughput",    # decompression-overhead substrate
     "benchmarks.roofline",             # §Roofline table (dry-run artifacts)

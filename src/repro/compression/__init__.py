@@ -17,6 +17,7 @@ from repro.compression.zfp import (
     encode_fixed_accuracy,
     encode_fixed_accuracy_batch,
     encode_fixed_rate,
+    encode_fixed_rate_batch,
 )
 from repro.compression.transform import blockify, deblockify
 
@@ -35,4 +36,5 @@ __all__ = [
     "encode_fixed_accuracy",
     "encode_fixed_accuracy_batch",
     "encode_fixed_rate",
+    "encode_fixed_rate_batch",
 ]

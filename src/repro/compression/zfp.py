@@ -93,6 +93,37 @@ def decode_fixed_rate(cf: CompressedField) -> jnp.ndarray:
     return _crop(xp, cf.shape)
 
 
+@partial(jax.jit, static_argnames=("bits_per_value", "use_pallas"))
+def encode_fixed_rate_batch(xs: jnp.ndarray, bits_per_value: int,
+                            use_pallas: bool = False) -> CompressedField:
+    """Batched fixed-rate encode: one compiled call for a whole (N, ...) stack.
+
+    Returns a CompressedField whose array leaves carry a leading batch axis
+    (payload (N, nb, W), emax/nplanes (N, nb)); ``shape``/``padded_shape``
+    describe a single sample, matching ``encode_fixed_accuracy_batch``.
+
+    ``use_pallas=True`` routes the per-block transform + plane packing
+    through the Pallas TPU encode kernel (``kernels/zfp_codec.py``; interpret
+    mode off-TPU): all N samples' blocks are flattened into one (N*nb, 16)
+    grid so the kernel tiles a single long block axis.  Both paths produce
+    bit-identical payload/emax words (asserted in tests/test_compression.py
+    against the pure-jnp encoder).
+    """
+    assert 0 < bits_per_value <= T.TOTAL_PLANES
+    if not use_pallas:
+        return jax.vmap(lambda x: encode_fixed_rate(x, bits_per_value))(
+            xs.astype(jnp.float32))
+    from repro.kernels import ops                    # lazy: ops imports zfp
+    n = xs.shape[0]
+    xp = T.pad_to_blocks(xs.astype(jnp.float32))
+    blocks = T.blockify(xp)                          # (N * nb, 16)
+    payload, emax = ops.zfp_encode_blocks(blocks, bits_per_value)
+    nb = blocks.shape[0] // n
+    nplanes = jnp.full((n, nb), bits_per_value, dtype=jnp.int32)
+    return CompressedField(payload.reshape(n, nb, -1), emax.reshape(n, nb),
+                           nplanes, xs.shape[1:], xp.shape[1:])
+
+
 # ---------------------------------------------------------------------------
 # fixed-accuracy (error-bounded)
 # ---------------------------------------------------------------------------

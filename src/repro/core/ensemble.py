@@ -358,7 +358,8 @@ def _judge(band_art: BandArtifact, lossy_traj: dict, member: int,
 
 
 def certify_tolerance(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
-                      conditions: np.ndarray, train_fields: np.ndarray, *,
+                      conditions: Optional[np.ndarray],
+                      train_fields: Union[np.ndarray, str], *,
                       eval_conditions, eval_targets,
                       seeds: Sequence[int] = (0, 1, 2, 3),
                       multiples: Sequence[float] = (0.5, 1.0, 2.0, 4.0, 8.0,
@@ -373,8 +374,11 @@ def certify_tolerance(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     -> max benign tolerance.
 
     ``train_fields``: (n_train, H, W, F) normalized channels-last training
-    fields; ``conditions``: matching (n_train, cond_dim).  The eval set
-    supplies the metric trajectories that the band verdict compares.
+    fields, or a produced-dataset path from ``repro.datagen.produce`` (the
+    store is decoded batchwise; ``conditions=None`` then rebuilds them from
+    the provenance manifest).  ``conditions``: matching (n_train, cond_dim).
+    The eval set supplies the metric trajectories that the band verdict
+    compares.
 
     Steps (each a single compiled fan-out, never a Python loop over runs):
       1. vmapped raw seed ensemble -> per-epoch trajectories -> BandArtifact;
@@ -397,6 +401,14 @@ def certify_tolerance(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     from repro.data.loader import ShardAwareLoader
     from repro.data.shards import ShardedCompressedStore
 
+    if isinstance(train_fields, str):
+        from repro.datagen import produced_training_arrays
+        conditions, train_fields = produced_training_arrays(train_fields,
+                                                            conditions)
+    elif conditions is None:
+        raise ValueError("conditions=None is only valid when train_fields "
+                         "is a produced-dataset path (conditions are then "
+                         "rebuilt from its provenance manifest)")
     train_fields = np.asarray(train_fields, np.float32)
     n_train = len(train_fields)
     if lossy_seed is None:

@@ -45,6 +45,78 @@ def _shard_filename(k: int) -> str:
     return f"shard_{k:05d}.bin"
 
 
+def atomic_write_json(path: str, obj: dict) -> None:
+    """Write JSON via unique temp file + ``os.replace`` so a kill mid-write
+    can never leave a torn file at ``path`` (the reader sees either the old
+    content or the new, never a partial stream).  The temp name is unique
+    per writer, so concurrent writers (two hosts finalizing the same store
+    on a shared FS) cannot rename each other's half-written bytes -- last
+    complete write wins."""
+    import tempfile
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def pack_sample_records(cf) -> tuple:
+    """Per-sample shard records from a batched ``CompressedField``.
+
+    Returns ``(records, widths, logical_bytes)``: ``records[j]`` is the flat
+    little-endian int32 word array (``nb * w`` payload words followed by
+    ``nb`` emax words) that shard files store for sample ``j``; ``widths[j]``
+    is the per-sample payload width ``w``.  The single implementation of the
+    record layout, shared by ``ShardedCompressedStore._build`` and the
+    streaming producer in ``repro.datagen`` — their bit-identical-stores
+    contract rides on this being one function.
+    """
+    pay = np.asarray(cf.payload)                          # (c, nb, MAXW)
+    ema = np.asarray(cf.emax, np.int32)
+    npl = np.asarray(cf.nplanes)
+    logical = np.asarray(compressed_nbytes_batch(cf)).astype(np.int64)
+    records, widths = [], []
+    for j in range(pay.shape[0]):
+        w = int(np.ceil(npl[j].max() / 2)) or 1
+        records.append(np.concatenate(
+            [pay[j, :, :w].ravel(), ema[j]]).astype("<i4"))
+        widths.append(w)
+    return records, np.asarray(widths, np.int64), logical
+
+
+def build_manifest(shape, padded_shape, block_count: int, shard_size: int,
+                   num_samples: int, tolerances, widths,
+                   logical_bytes) -> dict:
+    """Assemble the store manifest dict (the one source of its schema)."""
+    num_shards = -(-num_samples // shard_size)
+    return {
+        "format": FORMAT_TAG,
+        "shape": list(shape),
+        "padded_shape": list(padded_shape),
+        "block_count": int(block_count),
+        "shard_size": int(shard_size),
+        "num_samples": int(num_samples),
+        "tolerances": [float(t) for t in tolerances],
+        "widths": [int(w) for w in widths],
+        "logical_bytes": [int(b) for b in logical_bytes],
+        "shards": [{"file": _shard_filename(k),
+                    "start": k * shard_size,
+                    "count": (min((k + 1) * shard_size, num_samples)
+                              - k * shard_size)}
+                   for k in range(num_shards)],
+    }
+
+
 class ShardedCompressedStore:
     """Error-bounded ZFP store packing ``shard_size`` samples per shard.
 
@@ -83,24 +155,19 @@ class ShardedCompressedStore:
         self.sample_nbytes = int(np.prod(self.shape)) * 4
         self.tolerances = tolerances
 
-        payloads, emaxs, widths, logical = [], [], [], []
+        records, widths, logical = [], [], []
         for lo in range(0, self.num_samples, self.shard_size):
             chunk = jnp.asarray(xs[lo:lo + self.shard_size])
             cf = encode_fixed_accuracy_batch(
                 chunk, jnp.asarray(tolerances[lo:lo + self.shard_size]))
             self._padded_shape = cf.padded_shape
-            logical.append(np.asarray(compressed_nbytes_batch(cf)))
-            pay = np.asarray(cf.payload)                      # (c, nb, MAXW)
-            ema = np.asarray(cf.emax, np.int32)
-            npl = np.asarray(cf.nplanes)
-            for j in range(pay.shape[0]):
-                w = int(np.ceil(npl[j].max() / 2)) or 1
-                payloads.append(pay[j, :, :w])
-                emaxs.append(ema[j])
-                widths.append(w)
-        self.nb = payloads[0].shape[0]
-        self.widths = np.asarray(widths, np.int64)
-        self.logical_bytes_per = np.concatenate(logical).astype(np.int64)
+            recs, ws, lb = pack_sample_records(cf)
+            records += recs
+            widths.append(ws)
+            logical.append(lb)
+        self.nb = int(np.asarray(cf.emax).shape[-1])
+        self.widths = np.concatenate(widths)
+        self.logical_bytes_per = np.concatenate(logical)
         self.logical_bytes = int(self.logical_bytes_per.sum())
         self._compute_offsets()
 
@@ -109,16 +176,14 @@ class ShardedCompressedStore:
         for k in range(self.num_shards):
             lo = k * self.shard_size
             hi = min(lo + self.shard_size, self.num_samples)
-            words = np.concatenate(
-                [np.concatenate([payloads[i].ravel(), emaxs[i]])
-                 for i in range(lo, hi)]).astype("<i4")
+            words = np.concatenate(records[lo:hi]).astype("<i4")
             if self.root is None:
                 self._shards[k] = words
             else:
                 words.tofile(os.path.join(self.root, _shard_filename(k)))
         if self.root is not None:
-            with open(os.path.join(self.root, MANIFEST_NAME), "w") as f:
-                json.dump(self.manifest(), f)
+            atomic_write_json(os.path.join(self.root, MANIFEST_NAME),
+                              self.manifest())
 
     def _compute_offsets(self) -> None:
         """Word offset of each sample's record within its shard."""
@@ -133,23 +198,10 @@ class ShardedCompressedStore:
     # -- manifest / reopen ---------------------------------------------------
 
     def manifest(self) -> dict:
-        return {
-            "format": FORMAT_TAG,
-            "shape": list(self.shape),
-            "padded_shape": list(self._padded_shape),
-            "block_count": int(self.nb),
-            "shard_size": self.shard_size,
-            "num_samples": int(self.num_samples),
-            "tolerances": [float(t) for t in self.tolerances],
-            "widths": [int(w) for w in self.widths],
-            "logical_bytes": [int(b) for b in self.logical_bytes_per],
-            "shards": [{"file": _shard_filename(k),
-                        "start": k * self.shard_size,
-                        "count": (min((k + 1) * self.shard_size,
-                                      self.num_samples)
-                                  - k * self.shard_size)}
-                       for k in range(self.num_shards)],
-        }
+        return build_manifest(self.shape, self._padded_shape, self.nb,
+                              self.shard_size, self.num_samples,
+                              self.tolerances, self.widths,
+                              self.logical_bytes_per)
 
     def _init_from_manifest(self, m: dict) -> None:
         assert m.get("format") == FORMAT_TAG, f"unknown format {m.get('format')}"

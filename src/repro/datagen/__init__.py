@@ -1,0 +1,27 @@
+"""Streaming datagen subsystem: simulate -> compress-on-device -> sharded store.
+
+The layer between the spectral solver and ``ShardedCompressedStore``:
+declarative ``ProductionPlan``s (scenario sweeps + codec + shard geometry),
+a streaming producer whose bounded-queue async writer overlaps simulation /
+encode with device->host transfer / disk IO, atomic per-shard commits with
+full-provenance manifests, exact kill-and-resume, and multi-host shard
+partitioning.  ``resolve_store`` / ``open_produced`` are the read-side
+entry points that ``train_surrogate`` and ``certify_tolerance`` use to
+accept produced-dataset paths.
+"""
+from repro.datagen.plan import (CodecPlan, ProductionPlan, ScenarioPlan,
+                                PLAN_FORMAT)
+from repro.datagen.produce import (ProducedDataset, ProduceReport,
+                                   ScenarioReport, PRODUCTION_NAME, finalize,
+                                   load_provenance, open_produced, produce,
+                                   produced_training_arrays, resolve_store,
+                                   scenario_conditions)
+from repro.datagen.writer import ShardWriter, WriterStats
+
+__all__ = [
+    "CodecPlan", "ProductionPlan", "ScenarioPlan", "PLAN_FORMAT",
+    "ProducedDataset", "ProduceReport", "ScenarioReport", "PRODUCTION_NAME",
+    "finalize", "load_provenance", "open_produced", "produce",
+    "produced_training_arrays", "resolve_store", "scenario_conditions",
+    "ShardWriter", "WriterStats",
+]

@@ -141,12 +141,20 @@ def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     """Train; returns (params, loss_history).
 
     ``data`` is the compression seam: an ArrayStore (``get_batch(idx)`` --
-    raw memmap or online ZFP decode) or a legacy ``idx -> (B, H, W, F)``
-    callable (then ``num_samples`` is required).  ``target_transform``
-    post-processes fetched batches (e.g. channels-first stores feeding the
-    channels-last model).  ``loader`` overrides the auto-built one -- pass a
-    ``ShardAwareLoader`` with host_id/num_hosts for multi-host training.
+    raw memmap or online ZFP decode), a produced-dataset path from
+    ``repro.datagen.produce`` (resolved to its ``ShardedCompressedStore``;
+    produced stores are channels-first, so pass
+    ``target_transform=channels_last`` and conditions from
+    ``repro.datagen.scenario_conditions``), or a legacy
+    ``idx -> (B, H, W, F)`` callable (then ``num_samples`` is required).
+    ``target_transform`` post-processes fetched batches (e.g. channels-first
+    stores feeding the channels-last model).  ``loader`` overrides the
+    auto-built one -- pass a ``ShardAwareLoader`` with host_id/num_hosts for
+    multi-host training.
     """
+    if isinstance(data, str):
+        from repro.datagen import resolve_store
+        data = resolve_store(data)
     get_targets = make_getter(data, target_transform)
     opt_cfg = AdamConfig(lr=train_cfg.lr)
     key = jax.random.PRNGKey(train_cfg.seed)

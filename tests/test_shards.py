@@ -218,3 +218,48 @@ def test_prefetched_sharded_pipeline_end_to_end(disk_store):
     pf.close()
     for idx, g in zip(want_idx, got):
         assert (g == np.asarray(disk_store.get_batch(idx))).all()
+
+
+# ---------------------------------------------------------------------------
+# atomic manifest commit
+# ---------------------------------------------------------------------------
+
+def test_manifest_write_is_atomic_under_crash(field_stack, tolerances,
+                                              tmp_path, monkeypatch):
+    """A kill mid-manifest-write must leave either the old manifest or none
+    -- never a torn JSON document."""
+    import json as _json
+    import os
+    from repro.data.shards import atomic_write_json
+
+    root = str(tmp_path / "store")
+    ShardedCompressedStore(list(field_stack), tolerances=tolerances,
+                           root=root, shard_size=8)
+    path = os.path.join(root, MANIFEST_NAME)
+    before = open(path, "rb").read()
+
+    real_dump = _json.dump
+
+    def dying_dump(obj, f, **kw):
+        f.write('{"format": "torn')           # partial bytes hit the temp
+        f.flush()
+        raise OSError("simulated kill mid-write")
+
+    monkeypatch.setattr(_json, "dump", dying_dump)
+    with pytest.raises(OSError, match="simulated kill"):
+        atomic_write_json(path, {"format": "new"})
+    monkeypatch.setattr(_json, "dump", real_dump)
+
+    assert open(path, "rb").read() == before      # old manifest intact
+    store = ShardedCompressedStore.open(root)     # and still consistent
+    assert store.num_samples == len(field_stack)
+
+    # crash between temp write and rename: same guarantee
+    real_replace = os.replace
+    monkeypatch.setattr(os, "replace",
+                        lambda *a: (_ for _ in ()).throw(
+                            OSError("simulated kill pre-rename")))
+    with pytest.raises(OSError, match="pre-rename"):
+        atomic_write_json(path, {"format": "new"})
+    monkeypatch.setattr(os, "replace", real_replace)
+    assert open(path, "rb").read() == before
