@@ -78,7 +78,33 @@ def ensemble_timing_row(tag, model_cfg, train_cfg, cond, store, seeds,
             f"speedup={seq_s / max(ens_s, 1e-9):.2f}x")
 
 
+# One study per process: every benchmark module shares this dict (the study
+# build -- sims + model training -- is the dominant benchmark cost, and even
+# the cached reload is worth paying once, not once per module).
+_STUDY: dict | None = None
+_STUDY_SAMPLES: dict = {}
+
+
+def study_test_samples(n: int):
+    """The shared benchmark substrate: ``n`` channels-first (C, H, W) samples
+    cycled from the cached study's test fields, plus the study's Algorithm-1
+    tolerance.  Built once per process and shared by loading_throughput /
+    epoch_time / ensemble_certify so each module stops regenerating its own
+    copy of the same arrays.  Returns ``(samples, tolerance, study)``;
+    treat the samples as read-only.
+    """
+    study = build_study()
+    if n not in _STUDY_SAMPLES:
+        test = study["test_nf"]
+        _STUDY_SAMPLES[n] = [np.transpose(test[i % len(test)], (2, 0, 1))
+                             for i in range(n)]
+    return _STUDY_SAMPLES[n], float(study["meta"]["alg1_tolerance"]), study
+
+
 def build_study(force: bool = False) -> dict:
+    global _STUDY
+    if _STUDY is not None and not force:
+        return _STUDY
     os.makedirs(DATA_DIR, exist_ok=True)
     cache = os.path.join(DATA_DIR, "study.npz")
     meta_p = os.path.join(DATA_DIR, "study.json")
@@ -86,7 +112,8 @@ def build_study(force: bool = False) -> dict:
         z = np.load(cache, allow_pickle=True)
         with open(meta_p) as f:
             meta = json.load(f)
-        return {"meta": meta, **{k: z[k] for k in z.files}}
+        _STUDY = {"meta": meta, **{k: z[k] for k in z.files}}
+        return _STUDY
 
     t_start = time.time()
     pvec, fields = generate_ensemble(RT_MINI, N_SIMS, seed=0)
@@ -155,7 +182,8 @@ def build_study(force: bool = False) -> dict:
     np.savez_compressed(cache, **arrays)
     with open(meta_p, "w") as f:
         json.dump(meta, f, indent=1)
-    return {"meta": meta, **arrays}
+    _STUDY = {"meta": meta, **arrays}
+    return _STUDY
 
 
 def denormalize(study, x):

@@ -1,31 +1,38 @@
-"""Paper Fig. 12: per-epoch training time, raw vs compressed, vs worker count.
+"""Paper Fig. 12: per-epoch training time, raw vs compressed, vs worker count
+-- plus the device-resident path that removes host data movement entirely.
 
 Measures one real epoch (data + train step) through the unified store/loader
 train loop for raw and compressed stores under each emulated file system,
 both synchronously (prefetch=0) and with the PrefetchLoader overlapping host
-read + decode with the jitted train step.  Worker scaling is projected the
+read + decode with the jitted train step.  The ``zfp_device_resident`` row
+uploads the same compressed store to device once and trains through the
+fused gather->decode step (repro.train.source): zero host bytes per batch,
+so it must beat even the prefetch-overlapped host path -- the smoke variant
+raises if it does not, and asserts the decoded batches are bit-identical to
+``ShardedCompressedStore.get_batch`` first.  Worker scaling is projected the
 way the paper's Fig. 12 exhibits it: compute time divides by workers, I/O
 bandwidth is the shared-file-system constant (documented analytic
 projection; the single-node measurement is the anchor).
 
 ``--smoke`` runs a synthetic-data variant (no cached study, one emulated
 file system) in well under a minute — CI uses it to exercise the
-prefetch-overlapped loop end-to-end on every PR.
+prefetch-overlapped loop and the device-resident path end-to-end on every PR.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CompressedArrayStore, RawArrayStore
-from repro.core.pipeline import IoStats, channels_last
+from repro.data import ShardedCompressedStore, channels_last
+from repro.data.store import IoStats
 from repro.train.loop import TrainConfig, train_surrogate
 
 WORKERS = (24, 48, 72)
 ENSEMBLE_SEEDS = (0, 1, 2, 3)
+DEVICE_SHARD_SIZE = 16
 
 
 def _epoch_seconds(model_cfg, store, cond, batch_size, prefetch, transform):
@@ -41,8 +48,13 @@ def _epoch_seconds(model_cfg, store, cond, batch_size, prefetch, transform):
 
 
 def _measure(model_cfg, stores, cond, batch_size):
-    """One epoch per store, sync vs prefetch-overlapped; returns CSV rows."""
-    rows = []
+    """One epoch per store, sync vs prefetch-overlapped.
+
+    Returns ``(rows, overlap_walls)`` -- the overlap wall-clock per label so
+    the device-resident row can report its speedup against the best host
+    path without re-measuring.
+    """
+    rows, overlap_walls = [], {}
     for label, store, tf in stores:
         _epoch_seconds(model_cfg, store, cond, batch_size, 0, tf)  # jit warmup
         sync_s = _epoch_seconds(model_cfg, store, cond, batch_size, 0, tf)
@@ -50,11 +62,42 @@ def _measure(model_cfg, stores, cond, batch_size):
         io_s = store.stats.read_seconds + store.stats.decode_seconds
         compute_s = max(sync_s - io_s, 1e-6)
         proj = {w: compute_s / w * 24 + io_s for w in WORKERS}
+        overlap_walls[label] = overlap_s
         rows.append((label, overlap_s * 1e6,
                      f"sync={sync_s:.2f}s overlap={overlap_s:.2f}s "
                      f"io={io_s:.2f}s speedup={sync_s / max(overlap_s, 1e-9):.2f}x "
                      + " ".join(f"proj{w}={proj[w]:.2f}s" for w in WORKERS)))
-    return rows
+    return rows, overlap_walls
+
+
+def _device_resident_row(model_cfg, samples, tol, cond, batch_size, tag,
+                         overlap_s, require_win: bool = False):
+    """Train one epoch through the fused device-resident path.
+
+    Builds the same error-bounded sharded store, uploads it once, verifies
+    batch decode is bit-identical to the host store, then times the epoch.
+    ``require_win=True`` (the CI smoke) turns "device beats the
+    prefetch-overlapped host path" into a hard failure.
+    """
+    store = ShardedCompressedStore(samples, tolerances=[tol] * len(samples),
+                                   shard_size=DEVICE_SHARD_SIZE)
+    dev = store.as_device_resident()
+    probe = np.random.default_rng(0).integers(0, len(samples), batch_size)
+    if not np.array_equal(np.asarray(store.get_batch(probe)),
+                          np.asarray(dev.get_batch(probe))):
+        raise RuntimeError(f"{tag}: device-resident decode is not "
+                           "bit-identical to ShardedCompressedStore")
+    _epoch_seconds(model_cfg, dev, cond, batch_size, 0, channels_last)  # warm
+    dev_s = _epoch_seconds(model_cfg, dev, cond, batch_size, 0, channels_last)
+    vs_overlap = overlap_s / max(dev_s, 1e-9)
+    if require_win and dev_s >= overlap_s:
+        raise RuntimeError(
+            f"{tag}: device-resident epoch ({dev_s:.2f}s) did not beat the "
+            f"prefetch-overlapped host path ({overlap_s:.2f}s)")
+    return (f"{tag}/zfp_device_resident", dev_s * 1e6,
+            f"epoch={dev_s:.2f}s vs_overlap={vs_overlap:.2f}x "
+            f"ratio={dev.ratio:.1f}x resident_MB={dev.resident_bytes / 1e6:.2f} "
+            f"host_bytes_per_batch=0")
 
 
 def _ensemble_epoch(model_cfg, samples, cond, batch_size, tag,
@@ -75,17 +118,15 @@ def _ensemble_epoch(model_cfg, samples, cond, batch_size, tag,
 
 
 def run(tmp_root: str = "/tmp/repro_epoch_bench"):
-    from benchmarks.common import MODEL_CFG, build_study
+    from benchmarks.common import MODEL_CFG, study_test_samples
     from benchmarks.loading_throughput import FILE_SYSTEMS
-    study = build_study()
-    test = study["test_nf"]
-    samples = [np.transpose(test[i % len(test)], (2, 0, 1)) for i in range(96)]
-    tol = study["meta"]["alg1_tolerance"]
+    samples, tol, _study = study_test_samples(96)
     cond = np.random.default_rng(0).standard_normal(
         (len(samples), MODEL_CFG.cond_dim)).astype(np.float32)
     transform = channels_last
 
     rows = []
+    zfp_overlap = None
     for fs, bw in FILE_SYSTEMS.items():
         stores = [
             (f"epoch_time/{fs}/raw",
@@ -96,7 +137,12 @@ def run(tmp_root: str = "/tmp/repro_epoch_bench"):
                                   root=f"{tmp_root}/{fs}/zfp",
                                   bandwidth_mbs=bw), transform),
         ]
-        rows += _measure(MODEL_CFG, stores, cond, batch_size=16)
+        fs_rows, walls = _measure(MODEL_CFG, stores, cond, batch_size=16)
+        rows += fs_rows
+        if zfp_overlap is None:         # unthrottled fs0: the fastest host path
+            zfp_overlap = walls[f"epoch_time/{fs}/zfp"]
+    rows.append(_device_resident_row(MODEL_CFG, samples, tol, cond, 16,
+                                     "epoch_time", zfp_overlap))
     rows.append(_ensemble_epoch(MODEL_CFG, samples, cond, 16, "epoch_time"))
     return rows
 
@@ -124,7 +170,10 @@ def run_smoke(tmp_root: str = "/tmp/repro_epoch_smoke"):
                               root=f"{tmp_root}/zfp", bandwidth_mbs=bw),
          transform),
     ]
-    rows = _measure(cfg, stores, cond, batch_size=8)
+    rows, walls = _measure(cfg, stores, cond, batch_size=8)
+    rows.append(_device_resident_row(
+        cfg, samples, 1e-2, cond, 8, "epoch_time/smoke",
+        walls["epoch_time/smoke/zfp"], require_win=True))
     rows.append(_ensemble_epoch(cfg, samples, cond, 8, "epoch_time/smoke"))
     return rows
 

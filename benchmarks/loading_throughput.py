@@ -16,7 +16,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import build_study
+from benchmarks.common import study_test_samples
 from repro.core import CompressedArrayStore, RawArrayStore
 from repro.data import ShardedCompressedStore
 
@@ -37,11 +37,7 @@ def _time_store(store, n_samples: int, rng) -> float:
 
 
 def run(tmp_root: str = "/tmp/repro_io_bench"):
-    study = build_study()
-    test = study["test_nf"]
-    samples = [np.transpose(test[i % len(test)], (2, 0, 1))
-               for i in range(128)]
-    tol = study["meta"]["alg1_tolerance"]
+    samples, tol, _study = study_test_samples(128)
     tols = [tol] * len(samples)
     rows = []
     rng = np.random.default_rng(0)
@@ -71,6 +67,18 @@ def run(tmp_root: str = "/tmp/repro_io_bench"):
                 extra += (f" ratio={shrd.ratio:.1f}x"
                           f" speedup_vs_zfp={walls['zfp'] / wall:.2f}x")
             rows.append((f"loading/{fs}/{name}", wall * 1e6 / N_BATCHES, extra))
+        if fs == "fs0_local":
+            # device-resident gather+decode: no host reads, so one row covers
+            # every "file system" -- there is no file system left in the path
+            dev = shrd.as_device_resident()
+            wall = _time_store(dev, len(samples), rng)
+            raw_equiv = BATCH * N_BATCHES * samples[0].nbytes / 1e6
+            rows.append((f"loading/{fs}/zfp_device_resident",
+                         wall * 1e6 / N_BATCHES,
+                         f"raw_equiv_MBps={raw_equiv / wall:.1f} "
+                         f"ratio={dev.ratio:.1f}x "
+                         f"speedup_vs_sharded={walls['zfp_sharded'] / wall:.2f}x "
+                         f"host_bytes=0"))
     return rows
 
 

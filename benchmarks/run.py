@@ -1,10 +1,18 @@
 """Benchmark driver: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  The shared study (ensembles + seed
-models + lossy models) builds once and is cached under experiments/data/.
+Prints ``name,us_per_call,derived`` CSV and, per module, writes a
+machine-readable ``experiments/bench/BENCH_<module>.json`` carrying the raw
+rows, the key=value metrics parsed out of each ``derived`` string (ratios,
+throughputs, speedups), and the module wall-clock -- so the performance
+trajectory is trackable across PRs by diffing artifacts instead of scraping
+CSV.  The shared study (ensembles + seed models + lossy models) builds once
+per process and is cached under experiments/data/.
 """
 from __future__ import annotations
 
+import json
+import os
+import re
 import sys
 import time
 import traceback
@@ -19,10 +27,49 @@ MODULES = [
     "benchmarks.mixing_layer",         # Fig. 8
     "benchmarks.loading_throughput",   # Fig. 11
     "benchmarks.datagen_throughput",   # streaming produce: seq vs overlapped
-    "benchmarks.epoch_time",           # Fig. 12
+    "benchmarks.epoch_time",           # Fig. 12 (+ device-resident row)
     "benchmarks.kernel_throughput",    # decompression-overhead substrate
     "benchmarks.roofline",             # §Roofline table (dry-run artifacts)
 ]
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "bench")
+
+_METRIC = re.compile(r"([A-Za-z_][\w]*)=([-+0-9.eE]+)x?s?")
+
+
+def parse_metrics(derived: str) -> dict:
+    """Pull ``key=value`` numeric tokens out of a derived string (units like
+    the trailing 'x' / 's' are stripped; non-numeric values are skipped)."""
+    out = {}
+    for key, val in _METRIC.findall(str(derived)):
+        try:
+            out[key] = float(val)
+        except ValueError:
+            continue
+    return out
+
+
+def write_bench_json(mod_name: str, rows, seconds: float,
+                     status: str) -> str:
+    """Persist one module's results as BENCH_<module>.json (atomic write)."""
+    from repro.data.shards import atomic_write_json
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    short = mod_name.rsplit(".", 1)[-1]
+    path = os.path.join(BENCH_DIR, f"BENCH_{short}.json")
+    atomic_write_json(path, {
+        "module": mod_name,
+        "status": status,
+        "seconds": round(seconds, 2),
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "rows": [{
+            "name": name,
+            "us_per_call": float(us),
+            "derived": str(derived),
+            "metrics": parse_metrics(derived),
+        } for name, us, derived in rows],
+    })
+    return path
 
 
 def main() -> None:
@@ -31,16 +78,22 @@ def main() -> None:
     failures = 0
     for mod_name in MODULES:
         t0 = time.time()
+        rows = []
+        status = "ok"
         try:
             mod = importlib.import_module(mod_name)
-            for name, us, derived in mod.run():
+            rows = list(mod.run())
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
         except Exception:
             failures += 1
+            status = "failed"
             print(f"{mod_name},0,FAILED")
             traceback.print_exc(file=sys.stderr)
-        print(f"# {mod_name} took {time.time() - t0:.1f}s", file=sys.stderr)
+        seconds = time.time() - t0
+        write_bench_json(mod_name, rows, seconds, status)
+        print(f"# {mod_name} took {seconds:.1f}s", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

@@ -107,6 +107,23 @@ def main():
     print(f"  kill@step5 + resume vs uninterrupted: "
           f"bit-identical params = {exact}")
 
+    # --- device-resident training: gather + decode inside the jitted step --
+    # The compressed store fits in device memory (that is the paper's whole
+    # economics), so upload it once and train through the fused step: zero
+    # host bytes per batch, decoded targets bit-identical to get_batch.
+    dev = store.as_device_resident()
+    probe = loader.take(1)[0]
+    same = bool(np.array_equal(np.asarray(store.get_batch(probe)),
+                               np.asarray(dev.get_batch(probe))))
+    dev_params, _ = train_surrogate(MODEL_CFG, tc, cond_n, dev,
+                                    target_transform=transform)
+    drift = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                zip(jax.tree_util.tree_leaves(full),
+                    jax.tree_util.tree_leaves(dev_params)))
+    print(f"\ndevice-resident store: {dev.resident_bytes / 1e3:.1f} kB in "
+          f"HBM ({dev.ratio:.1f}x), batch decode bit-identical = {same}, "
+          f"fused-step training drift vs host path = {drift:.2g}")
+
     # --- end-to-end certification (vmapped ensemble subsystem) -------------
     # One call runs the whole paper pipeline on this data: 3-seed vmapped
     # band ensemble, per-sample Algorithm-1 tolerances, every candidate

@@ -1,6 +1,8 @@
 """TPU-adapted ZFP-style error-bounded lossy compression.
 
 Public API:
+  Codec / get_codec / register_codec      -- the unified codec seam (api.py);
+                                             data, datagen and train consume this
   encode_fixed_rate / decode_fixed_rate   -- uniform bits-per-value (dense layout)
   encode_fixed_accuracy / decode          -- per-block plane counts, true error bound
   CompressedField                         -- pytree container + logical byte count
@@ -20,21 +22,41 @@ from repro.compression.zfp import (
     encode_fixed_rate_batch,
 )
 from repro.compression.transform import blockify, deblockify
+from repro.compression.api import (
+    BACKENDS,
+    Codec,
+    FixedAccuracyCodec,
+    FixedRateCodec,
+    codec_from_plan,
+    codec_names,
+    decode_stacked_payloads,
+    get_codec,
+    register_codec,
+)
 
 __all__ = [
+    "BACKENDS",
+    "Codec",
     "CompressedField",
+    "FixedAccuracyCodec",
+    "FixedRateCodec",
     "Q_FIXED_POINT",
     "TOTAL_PLANES",
     "blockify",
     "deblockify",
+    "codec_from_plan",
+    "codec_names",
     "compressed_nbytes",
     "compressed_nbytes_batch",
     "compression_ratio",
     "decode",
     "decode_batch",
     "decode_fixed_rate",
+    "decode_stacked_payloads",
     "encode_fixed_accuracy",
     "encode_fixed_accuracy_batch",
     "encode_fixed_rate",
     "encode_fixed_rate_batch",
+    "get_codec",
+    "register_codec",
 ]

@@ -1,0 +1,194 @@
+"""Unified Codec layer: one interface over every compression path.
+
+Every consumer of the ZFP codec (sharded stores, the streaming producer,
+Algorithm-1 tolerance search, the device-resident training path) used to
+call mode-specific free functions (``encode_fixed_accuracy_batch``,
+``encode_fixed_rate_batch``, ``decode_stacked_payloads``...).  This module
+is the single seam instead:
+
+  Codec.encode_batch(xs[, tolerances]) -> CompressedField   (batched)
+  Codec.decode_batch(cf)               -> (N, ...) float32
+  Codec.nbytes(cf)                     -> (N,) logical bytes
+
+Two codecs, each with a pure-jnp reference backend and a Pallas kernel
+backend behind one registry:
+
+  get_codec("fixed_accuracy", tolerance=1e-3)                  # error-bounded
+  get_codec("fixed_rate", bits_per_value=12, backend="pallas") # uniform rate
+
+Codec instances are frozen dataclasses — hashable, so they can ride through
+``jax.jit`` static arguments — and every method is jit-traceable: the fused
+gather→decode train step (repro.train.source) traces ``decode_stacked_payloads``
+directly into the compiled step.  Both backends are bit-identical (asserted
+in tests); ``backend="pallas"`` routes the kernels in repro.kernels, which
+themselves fall back to a compiled-jnp oracle off-TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression import transform as T
+from repro.compression.zfp import (
+    CompressedField, compressed_nbytes_batch, decode_batch as _decode_batch_jnp,
+    encode_fixed_accuracy_batch, encode_fixed_rate_batch,
+)
+
+BACKENDS = ("jnp", "pallas")
+
+
+@runtime_checkable
+class Codec(Protocol):
+    """What the data/datagen/train layers require of a compression codec."""
+    backend: str
+
+    @property
+    def name(self) -> str: ...
+
+    def encode_batch(self, xs, tolerances=None) -> CompressedField: ...
+
+    def decode_batch(self, cf: CompressedField) -> jnp.ndarray: ...
+
+    def nbytes(self, cf: CompressedField) -> jnp.ndarray: ...
+
+
+def decode_stacked_payloads(payload, emax, padded_shape, shape,
+                            nplanes=None) -> jnp.ndarray:
+    """One-kernel decode of a stacked batch of packed ZFP streams.
+
+    payload: (B, nb, wmax) int32 plane words, emax: (B, nb) int32.  Samples
+    narrower than wmax are zero-padded (zero words decode as zero planes),
+    so the result is exact per sample.  With ``nplanes`` (B, nb) the
+    fixed-accuracy kernel masks each block's dropped planes explicitly —
+    required when payloads may carry nonzero bits beyond a block's kept
+    planes (e.g. a fixed-rate stream reinterpreted at a lower rate), and the
+    path the device-resident store traces into the jitted train step.
+
+    The single implementation of the batch-decode tail, shared by
+    CompressedArrayStore / ShardedCompressedStore / DeviceResidentStore —
+    their bit-exactness contract rides on this being one function.  Accepts
+    numpy or jax arrays and is jit-traceable.
+    """
+    from repro.kernels import ops                    # lazy: ops imports zfp
+    b, nb, wmax = payload.shape
+    flat_p = jnp.reshape(jnp.asarray(payload), (b * nb, wmax))
+    flat_e = jnp.reshape(jnp.asarray(emax), (b * nb,))
+    if nplanes is None:
+        blocks = ops.zfp_decode_blocks_fast(flat_p, flat_e, 2 * wmax)
+    else:
+        flat_n = jnp.reshape(jnp.asarray(nplanes), (b * nb,))
+        blocks = ops.zfp_decode_blocks_fa_fast(flat_p, flat_e, flat_n)
+    batch = T.deblockify(blocks, (b,) + tuple(padded_shape))
+    return batch[(slice(None),) + tuple(slice(0, s) for s in shape)]
+
+
+def _decode_batch_kernel(cf: CompressedField) -> jnp.ndarray:
+    """Kernel-path batched decode of a (N, ...)-leaved CompressedField."""
+    return decode_stacked_payloads(cf.payload, cf.emax, cf.padded_shape,
+                                   cf.shape, nplanes=cf.nplanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedAccuracyCodec:
+    """Error-bounded mode: per-sample L-inf tolerances, per-block plane counts.
+
+    ``tolerance`` is the default when ``encode_batch`` is called without
+    per-sample tolerances (Algorithm 1 supplies per-sample ones).
+    """
+    tolerance: Optional[float] = None
+    backend: str = "pallas"
+
+    @property
+    def name(self) -> str:
+        return "fixed_accuracy"
+
+    def encode_batch(self, xs, tolerances=None) -> CompressedField:
+        if tolerances is None:
+            if self.tolerance is None:
+                raise ValueError("fixed_accuracy encode needs per-sample "
+                                 "tolerances or a codec-level default")
+            tolerances = jnp.full((xs.shape[0],), self.tolerance, jnp.float32)
+        return encode_fixed_accuracy_batch(xs, jnp.asarray(tolerances,
+                                                           jnp.float32))
+
+    def decode_batch(self, cf: CompressedField) -> jnp.ndarray:
+        if self.backend == "pallas":
+            return _decode_batch_kernel(cf)
+        return _decode_batch_jnp(cf)
+
+    def nbytes(self, cf: CompressedField) -> jnp.ndarray:
+        return compressed_nbytes_batch(cf)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedRateCodec:
+    """Uniform bits-per-value mode (dense payload, no per-block headers)."""
+    bits_per_value: int = 12
+    backend: str = "jnp"
+
+    @property
+    def name(self) -> str:
+        return "fixed_rate"
+
+    def encode_batch(self, xs, tolerances=None) -> CompressedField:
+        del tolerances                   # rate is fixed; no error bound
+        return encode_fixed_rate_batch(xs, self.bits_per_value,
+                                       use_pallas=self.backend == "pallas")
+
+    def decode_batch(self, cf: CompressedField) -> jnp.ndarray:
+        if self.backend == "pallas":
+            return _decode_batch_kernel(cf)
+        return _decode_batch_jnp(cf)
+
+    def nbytes(self, cf: CompressedField) -> jnp.ndarray:
+        return compressed_nbytes_batch(cf)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register_codec(name: str, factory) -> None:
+    """Register a codec factory under ``name`` (``get_codec`` instantiates
+    it with the caller's keyword parameters)."""
+    if not callable(factory):
+        raise TypeError(f"codec factory for {name!r} must be callable")
+    _REGISTRY[name] = factory
+
+
+def codec_names() -> list:
+    return sorted(_REGISTRY)
+
+
+def get_codec(name: str, *, backend: str = "pallas", **params) -> Codec:
+    """Instantiate a registered codec: ``get_codec("fixed_accuracy",
+    tolerance=1e-3)``.  ``backend`` selects "jnp" (pure reference) or
+    "pallas" (kernel path; compiled-oracle fallback off-TPU)."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown codec {name!r}; registered: {codec_names()}")
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+    return _REGISTRY[name](backend=backend, **params)
+
+
+register_codec("fixed_accuracy", FixedAccuracyCodec)
+register_codec("fixed_rate", FixedRateCodec)
+
+
+def codec_from_plan(codec_plan) -> Codec:
+    """Codec for a datagen ``CodecPlan``-shaped object (duck-typed: ``mode``
+    plus the mode's parameters), preserving the plan's backend choice."""
+    if codec_plan.mode == "fixed_accuracy":
+        return get_codec("fixed_accuracy", tolerance=codec_plan.tolerance,
+                         backend="jnp")
+    if codec_plan.mode == "fixed_rate":
+        backend = "pallas" if getattr(codec_plan, "use_pallas", False) else "jnp"
+        return get_codec("fixed_rate", bits_per_value=codec_plan.bits_per_value,
+                         backend=backend)
+    raise ValueError(f"unknown codec mode {codec_plan.mode!r}")

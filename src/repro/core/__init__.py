@@ -7,13 +7,14 @@
   ensemble       -- vmapped N-seed trainer (one jitted step advances every
                     member) + certify_tolerance, the end-to-end max-benign-
                     tolerance pipeline with persisted BandArtifacts
-  pipeline       -- ArrayStore protocol + raw / per-sample-compressed stores
+  pipeline       -- DEPRECATED re-exports: the stores / IoStats / ArrayStore
+                    protocol live in repro.data.store now (layering fix)
   grad_compress  -- beyond-paper: error-bounded gradient compression for DP
 
-The sharded many-samples-per-file store lives in repro.data.shards, and the
-ensemble module imports the data/train layers; both are re-exported here
-lazily (they import this package for IoStats/pipeline pieces, so an eager
-import would be circular).
+The sharded many-samples-per-file store lives in repro.data.shards, the
+device-resident store in repro.data.device_store, and the ensemble module
+imports the data/train layers; the ensemble names are re-exported here
+lazily (eager import would drag the whole train stack in at import time).
 """
 from repro.core.tolerance import (
     BatchToleranceResult, ToleranceResult, algorithm1_per_sample,

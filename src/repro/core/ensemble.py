@@ -14,10 +14,12 @@ hottest multi-run path; here ONE jitted step advances all N members at once:
     ``(seed, epoch)`` permutations via ``EnsembleLoader``; equivalence is
     asserted to tight numerical tolerance in tests/test_ensemble.py);
   * batches for all members are fetched through the same
-    ArrayStore/PrefetchLoader stack as single-model training -- for a
-    shared store the union of member indices is read and decoded ONCE per
-    step, for per-member stores (one lossy store per tolerance candidate)
-    each member reads its own;
+    BatchSource/PrefetchLoader stack as single-model training -- for a
+    shared host store the union of member indices is read and decoded ONCE
+    per step, for per-member stores (one lossy store per tolerance
+    candidate) each member reads its own; device-resident stores skip the
+    host entirely: every member gathers + decodes its batch from ONE
+    resident compressed payload inside the vmapped jitted step;
   * per-epoch metric trajectories (L1, PSNR, total mass/momentum) stream
     out of a vmapped eval, feeding ``compute_band`` and a persisted
     ``BandArtifact`` (JSON manifest + npz arrays).
@@ -50,7 +52,9 @@ from repro.data.loader import EnsembleLoader
 from repro.metrics import psnr, total_mass, total_momentum
 from repro.models.surrogate import (SurrogateConfig, apply_surrogate,
                                     init_surrogate, l1_loss)
-from repro.train.loop import TrainConfig, batch_stream, make_getter, make_loader
+from repro.train.loop import TrainConfig
+from repro.train.source import (batch_stream, make_ensemble_source,
+                                make_fused_ensemble_step, make_loader)
 from repro.train.optimizer import AdamConfig, adam_init, adam_update
 
 TRAJECTORY_METRICS = ("l1", "psnr", "mass", "mom_x", "mom_y")
@@ -161,7 +165,7 @@ def train_ensemble(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     if per_member and len(data) != len(seeds):
         raise ValueError(f"{len(data)} data sources for {len(seeds)} members")
     sources = list(data) if per_member else [data] * len(seeds)
-    getters = [make_getter(s, target_transform) for s in sources]
+    source = make_ensemble_source(data, conditions, target_transform)
 
     if loader is None:
         loader = EnsembleLoader([
@@ -177,18 +181,14 @@ def train_ensemble(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
         params = init_ensemble(model_cfg, seeds)
     opt_state = jax.vmap(lambda p: adam_init(p, opt_cfg))(params)
 
-    if per_member:
-        def fetch(idx_stack):
-            return (conditions[idx_stack],
-                    jnp.stack([g(idx_stack[m])
-                               for m, g in enumerate(getters)]))
+    device_path = source.kind == "device"
+    if device_path:
+        # every member gathers + decodes its batch from the single resident
+        # payload inside the vmapped step; the stream ships only (N, B) ints
+        fused_step = make_fused_ensemble_step(source, model_cfg, opt_cfg)
+        prefetch = 0
     else:
-        get = getters[0]
-
-        def fetch(idx_stack):
-            uniq, inv = np.unique(idx_stack, return_inverse=True)
-            batch = jnp.asarray(get(uniq))
-            return conditions[idx_stack], batch[inv.reshape(idx_stack.shape)]
+        prefetch = train_cfg.prefetch
 
     do_eval = eval_conditions is not None and eval_targets is not None
     if do_eval:
@@ -199,11 +199,15 @@ def train_ensemble(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     losses = []
     step = 0
     t0 = time.time()
-    stream = batch_stream(loader, fetch, train_cfg.epochs, train_cfg.prefetch)
+    stream = batch_stream(loader, source.fetch, train_cfg.epochs, prefetch)
     try:
-        for _lstate, (cond_b, tgt_b) in stream:
-            params, opt_state, loss = ensemble_train_step(
-                params, opt_state, cond_b, tgt_b, model_cfg, opt_cfg)
+        for _lstate, item in stream:
+            if device_path:
+                params, opt_state, loss = fused_step(params, opt_state, item)
+            else:
+                cond_b, tgt_b = item
+                params, opt_state, loss = ensemble_train_step(
+                    params, opt_state, cond_b, tgt_b, model_cfg, opt_cfg)
             step += 1
             if step % train_cfg.log_every == 0:
                 losses.append((step, np.asarray(loss)))
@@ -369,6 +373,7 @@ def certify_tolerance(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
                       sigmas: float = 2.0, shard_size: int = 32,
                       bisect_rounds: int = 0,
                       lossy_seed: Optional[int] = None,
+                      device_resident: bool = False,
                       artifact_dir: Optional[str] = None) -> CertificationResult:
     """End-to-end paper pipeline: seed ensemble -> Algorithm 1 -> lossy sweep
     -> max benign tolerance.
@@ -396,10 +401,17 @@ def certify_tolerance(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     Returns a ``CertificationResult``; ``result.max_benign`` carries the
     certified multiple + achieved compression ratio (paper Fig. 3/6).  Pass
     ``artifact_dir`` to persist the band artifact and a certification.json.
+
+    ``device_resident=True`` runs the lossy sweep on the device-resident
+    backend: one ``DeviceResidentCompressedStore`` per multiple (true
+    per-block plane counts), all candidates sharing a single stacked
+    resident payload while the vmapped ensemble gathers + decodes inside
+    its fused step -- zero host bytes per training batch.
     """
-    from repro.core.pipeline import RawArrayStore, channels_last
+    from repro.data.device_store import DeviceResidentCompressedStore
     from repro.data.loader import ShardAwareLoader
     from repro.data.shards import ShardedCompressedStore
+    from repro.data.store import RawArrayStore, channels_last
 
     if isinstance(train_fields, str):
         from repro.datagen import produced_training_arrays
@@ -450,9 +462,14 @@ def certify_tolerance(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
                                 np.full(n_train, e_model, np.float32))
 
     def lossy_candidates(mults):
-        stores = [ShardedCompressedStore(
-            samples_cf, tolerances=base.tolerance * m, shard_size=shard_size)
-            for m in mults]
+        if device_resident:
+            stores = [DeviceResidentCompressedStore.from_samples(
+                samples_cf, base.tolerance * m, shard_size=shard_size)
+                for m in mults]
+        else:
+            stores = [ShardedCompressedStore(
+                samples_cf, tolerances=base.tolerance * m,
+                shard_size=shard_size) for m in mults]
         run = train_ensemble(
             model_cfg, dataclasses.replace(train_cfg, seed=lossy_seed),
             conditions, stores, [lossy_seed] * len(stores),

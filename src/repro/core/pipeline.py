@@ -1,221 +1,27 @@
-"""Training-data pipeline: raw vs ZFP-compressed stores, online decompression.
+"""DEPRECATED location: the data-pipeline pieces moved down the stack.
 
-Implements the paper's two workflows (Fig. 2):
-  workflow 1: RawArrayStore        -- one raw array file per sample
-  workflow 2: CompressedArrayStore -- per-sample ZFP streams; each batch
-              access reads the compressed bytes and decodes on device via
-              the Pallas kernel (interpret mode on CPU).
+Historically this module owned the ``ArrayStore`` protocol, the raw /
+per-sample-compressed stores, IO accounting and the batch-decode tail --
+which forced ``repro.data.shards`` to import *upward* from core.  The
+layering is now:
 
-Both stores count bytes moved and read time so the Fig. 11/12 benchmarks can
-report data-loading throughput and per-epoch time.  An optional bandwidth
-throttle emulates the paper's three file systems (workspace / VAST / GPFS)
-on the container's single disk -- DESIGN.md §8 records this adaptation.
+  repro.compression.api   -- decode_stacked_payloads (the codec-level
+                             batch-decode tail)
+  repro.data.store        -- ArrayStore, IoStats, throttle, RawArrayStore,
+                             CompressedArrayStore, channels_last
+  repro.data.device_store -- DeviceResidentCompressedStore
+
+Import from those modules; everything below is a compatibility re-export
+kept so existing ``from repro.core.pipeline import ...`` sites keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-import os
-import time
-from typing import Optional, Protocol, Sequence, Tuple, runtime_checkable
+from repro.compression.api import decode_stacked_payloads
+from repro.data.store import (ArrayStore, CompressedArrayStore, IoStats,
+                              RawArrayStore, _throttle, channels_last,
+                              throttle)
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.compression import encode_fixed_accuracy, encode_fixed_rate
-from repro.compression import transform as T
-from repro.kernels import ops
-
-
-@runtime_checkable
-class ArrayStore(Protocol):
-    """Protocol every training-data store implements.
-
-    Shared by RawArrayStore, CompressedArrayStore and
-    repro.data.shards.ShardedCompressedStore, so loaders, benchmarks and the
-    train loop are store-agnostic: anything with indexed batch access,
-    IO accounting, and a logical footprint.
-    """
-    stats: "IoStats"
-    shape: Tuple[int, ...]
-    num_samples: int
-    sample_nbytes: int
-
-    def get_batch(self, idx: np.ndarray) -> jnp.ndarray: ...
-
-    @property
-    def stored_bytes(self) -> int: ...
-
-
-@dataclasses.dataclass
-class IoStats:
-    bytes_read: int = 0
-    read_seconds: float = 0.0
-    decode_seconds: float = 0.0
-    batches: int = 0
-
-    def throughput_mbs(self) -> float:
-        total = self.read_seconds + self.decode_seconds
-        return (self.bytes_read / 1e6) / max(total, 1e-9)
-
-
-def _throttle(nbytes: int, started: float, bandwidth_mbs: Optional[float]):
-    if bandwidth_mbs is None:
-        return
-    needed = nbytes / (bandwidth_mbs * 1e6)
-    elapsed = time.perf_counter() - started
-    if needed > elapsed:
-        time.sleep(needed - elapsed)
-
-
-def channels_last(batch: jnp.ndarray) -> jnp.ndarray:
-    """(B, C, H, W) store batch -> (B, H, W, C) model layout.
-
-    The stores compress over the trailing two dims, so they hold samples
-    channels-first; the surrogate consumes channels-last.  Pass this as
-    ``train_surrogate(..., target_transform=channels_last)``.
-    """
-    return jnp.transpose(batch, (0, 2, 3, 1))
-
-
-def decode_stacked_payloads(payload: np.ndarray, emax: np.ndarray,
-                            padded_shape, shape) -> jnp.ndarray:
-    """One-kernel decode of a stacked batch of packed ZFP streams.
-
-    payload: (B, nb, wmax) int32 plane words, emax: (B, nb) int32.  Samples
-    narrower than wmax are zero-padded (zero words decode as zero planes),
-    so the result is exact per sample.  Shared by CompressedArrayStore and
-    ShardedCompressedStore -- their bit-exactness contract rides on this
-    being the single implementation of the decode tail.
-    """
-    b, nb, wmax = payload.shape
-    blocks = ops.zfp_decode_blocks_fast(
-        jnp.asarray(payload.reshape(b * nb, wmax)),
-        jnp.asarray(emax.reshape(b * nb)), 2 * wmax)
-    batch = T.deblockify(blocks, (b,) + tuple(padded_shape))
-    return batch[(slice(None),) + tuple(slice(0, s) for s in shape)]
-
-
-class RawArrayStore:
-    """One raw .npy per sample (paper: one HDF5 per sample), or in-memory."""
-
-    def __init__(self, samples: Sequence[np.ndarray] | np.ndarray,
-                 root: Optional[str] = None,
-                 bandwidth_mbs: Optional[float] = None):
-        self.bandwidth_mbs = bandwidth_mbs
-        self.stats = IoStats()
-        self._mem = None
-        self.root = root
-        n = len(samples)
-        self.shape = tuple(np.asarray(samples[0]).shape)
-        if root is None:
-            # same float32 cast as the on-disk path: float64 inputs must not
-            # change sample_nbytes / throughput accounting between modes
-            self._mem = np.stack([np.asarray(s, np.float32) for s in samples])
-        else:
-            os.makedirs(root, exist_ok=True)
-            for i in range(n):
-                np.save(os.path.join(root, f"sample_{i:06d}.npy"),
-                        np.asarray(samples[i], np.float32))
-        self.num_samples = n
-        self.sample_nbytes = int(np.prod(self.shape)) * 4
-
-    @property
-    def stored_bytes(self) -> int:
-        return self.sample_nbytes * self.num_samples
-
-    def get_batch(self, idx: np.ndarray) -> jnp.ndarray:
-        t0 = time.perf_counter()
-        if self._mem is not None:
-            batch = self._mem[np.asarray(idx)]
-        else:
-            batch = np.stack([np.load(os.path.join(self.root, f"sample_{i:06d}.npy"))
-                              for i in np.asarray(idx)])
-        nbytes = batch.nbytes
-        _throttle(nbytes, t0, self.bandwidth_mbs)
-        self.stats.bytes_read += nbytes
-        self.stats.read_seconds += time.perf_counter() - t0
-        self.stats.batches += 1
-        return jnp.asarray(batch)
-
-
-class CompressedArrayStore:
-    """Per-sample ZFP streams with per-sample (Algorithm 1) tolerances.
-
-    Samples are (C, H, W) or (H, W) float arrays; compression runs over the
-    trailing two dims.  Per-sample payload widths vary with the adaptive
-    rate; batches pad to the in-batch max width (padded words decode as zero
-    planes, so decoding stays exact) and run one kernel decode per batch.
-    """
-
-    def __init__(self, samples: Sequence[np.ndarray],
-                 tolerances: Optional[Sequence[float]] = None,
-                 bits_per_value: Optional[int] = None,
-                 root: Optional[str] = None,
-                 bandwidth_mbs: Optional[float] = None):
-        assert (tolerances is None) != (bits_per_value is None)
-        self.bandwidth_mbs = bandwidth_mbs
-        self.stats = IoStats()
-        self.root = root
-        self.shape = tuple(np.asarray(samples[0]).shape)
-        self.num_samples = len(samples)
-        self.sample_nbytes = int(np.prod(self.shape)) * 4
-        self._payload, self._emax, self._widths = [], [], []
-        self.logical_bytes = 0
-        if root is not None:
-            os.makedirs(root, exist_ok=True)
-        for i, s in enumerate(samples):
-            x = jnp.asarray(np.asarray(s, np.float32))
-            if tolerances is not None:
-                cf = encode_fixed_accuracy(x, float(tolerances[i]))
-                w = int(np.ceil(int(jnp.max(cf.nplanes)) / 2)) or 1
-                payload = np.asarray(cf.payload)[:, :w]
-                from repro.compression import compressed_nbytes
-                self.logical_bytes += int(compressed_nbytes(cf))
-            else:
-                cf = encode_fixed_rate(x, bits_per_value)
-                payload = np.asarray(cf.payload)
-                w = payload.shape[1]
-                self.logical_bytes += payload.nbytes + cf.emax.shape[0]
-            emax = np.asarray(cf.emax, np.int32)
-            self._padded_shape = cf.padded_shape
-            if root is None:
-                self._payload.append(payload)
-                self._emax.append(emax)
-            else:
-                np.savez(os.path.join(root, f"sample_{i:06d}.npz"),
-                         payload=payload, emax=emax)
-            self._widths.append(w)
-
-    @property
-    def stored_bytes(self) -> int:
-        return self.logical_bytes
-
-    @property
-    def ratio(self) -> float:
-        return self.sample_nbytes * self.num_samples / max(self.logical_bytes, 1)
-
-    def get_batch(self, idx: np.ndarray) -> jnp.ndarray:
-        idx = np.asarray(idx)
-        t0 = time.perf_counter()
-        payloads, emaxs, nbytes = [], [], 0
-        for i in idx:
-            if self.root is None:
-                p, e = self._payload[i], self._emax[i]
-            else:
-                z = np.load(os.path.join(self.root, f"sample_{i:06d}.npz"))
-                p, e = z["payload"], z["emax"]
-            nbytes += p.nbytes + e.nbytes
-            payloads.append(p)
-            emaxs.append(e)
-        wmax = max(p.shape[1] for p in payloads)
-        payloads = [np.pad(p, ((0, 0), (0, wmax - p.shape[1]))) for p in payloads]
-        _throttle(nbytes, t0, self.bandwidth_mbs)
-        t1 = time.perf_counter()
-        batch = decode_stacked_payloads(np.stack(payloads), np.stack(emaxs),
-                                        self._padded_shape, self.shape)
-        batch.block_until_ready()
-        self.stats.bytes_read += nbytes
-        self.stats.read_seconds += t1 - t0
-        self.stats.decode_seconds += time.perf_counter() - t1
-        self.stats.batches += 1
-        return batch
+__all__ = [
+    "ArrayStore", "CompressedArrayStore", "IoStats", "RawArrayStore",
+    "channels_last", "decode_stacked_payloads", "throttle", "_throttle",
+]

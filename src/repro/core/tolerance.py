@@ -25,12 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compression import (
-    compressed_nbytes, compressed_nbytes_batch, decode, decode_batch,
-    encode_fixed_accuracy, encode_fixed_accuracy_batch,
-)
+from repro.compression import compressed_nbytes, decode, encode_fixed_accuracy
+from repro.compression.api import FixedAccuracyCodec
 
 C_D = {1: 1.044, 2: 1.089, 3: 1.134, 4: 1.178}   # Fox & Lindstrom, Appendix A
+
+# The search's inner encode/decode runs through the unified Codec seam; the
+# frozen (hashable) instance rides into the jitted search as a static arg.
+_SEARCH_CODEC = FixedAccuracyCodec(backend="jnp")
 
 
 @dataclasses.dataclass
@@ -118,9 +120,10 @@ class BatchToleranceResult:
                 for i in range(len(self))]
 
 
-@partial(jax.jit, static_argnames=("d", "max_iters"))
+@partial(jax.jit, static_argnames=("d", "max_iters", "codec"))
 def _search_batch(xs: jnp.ndarray, es: jnp.ndarray,
-                  d: int, max_iters: int):
+                  d: int, max_iters: int,
+                  codec: FixedAccuracyCodec = _SEARCH_CODEC):
     """Doubling/halving searches for all samples in one lax.while_loop.
 
     Per-sample masks replicate the reference control flow: double while the
@@ -135,10 +138,10 @@ def _search_batch(xs: jnp.ndarray, es: jnp.ndarray,
     axes = tuple(range(1, xs.ndim))
 
     def evaluate(t):
-        cf = encode_fixed_accuracy_batch(xs, t)
-        xd = decode_batch(cf)
+        cf = codec.encode_batch(xs, t)
+        xd = codec.decode_batch(cf)
         l1 = jnp.mean(jnp.abs(xd - xs), axis=axes)
-        ratio = sample_size * 4.0 / compressed_nbytes_batch(cf)
+        ratio = sample_size * 4.0 / codec.nbytes(cf)
         return l1, ratio
 
     init = {

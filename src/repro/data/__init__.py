@@ -1,6 +1,11 @@
+from repro.data.device_store import DeviceResidentCompressedStore
 from repro.data.loader import (EnsembleLoader, PrefetchLoader,
                                ShardAwareLoader, ShardedLoader)
 from repro.data.shards import ShardedCompressedStore
+from repro.data.store import (ArrayStore, CompressedArrayStore, IoStats,
+                              RawArrayStore, channels_last, throttle)
 
-__all__ = ["ShardedLoader", "ShardAwareLoader", "PrefetchLoader",
-           "EnsembleLoader", "ShardedCompressedStore"]
+__all__ = ["ArrayStore", "CompressedArrayStore", "DeviceResidentCompressedStore",
+           "EnsembleLoader", "IoStats", "PrefetchLoader", "RawArrayStore",
+           "ShardAwareLoader", "ShardedCompressedStore", "ShardedLoader",
+           "channels_last", "throttle"]

@@ -1,0 +1,187 @@
+"""Device-resident compressed training data: upload once, decode in-step.
+
+The paper's central economics are that the 23.7x-39x compressed dataset fits
+where the raw one cannot -- on an accelerator that means it fits *in HBM*.
+``DeviceResidentCompressedStore`` exploits that: the packed payload / emax /
+nplanes arrays for the WHOLE dataset upload to device once at open, and a
+batch is then ``payload[idx]`` gather + fixed-accuracy kernel decode, both
+traceable into the jitted train step (repro.train.source fuses gather +
+decode + model step into ONE compiled dispatch).  Zero host bytes move per
+batch; the host read→decode→transfer hot path that PrefetchLoader merely
+overlapped is gone entirely.
+
+Decoded batches are bit-identical to ``ShardedCompressedStore.get_batch``
+for the same indices: the stream bytes are the same records, padded words
+decode as zero planes, and the per-block ``nplanes`` mask only zeroes planes
+the encoder already truncated (asserted in tests/test_device_store.py).
+
+Memory cost: payload is held at the store-wide max width, so HBM footprint
+is ``N * nb * (wmax + 2) * 4`` bytes -- bounded by ``num_samples *
+sample_nbytes / ratio`` plus width padding.  ``stored_bytes`` still reports
+the logical two-level layout so compression-ratio accounting matches the
+host-streaming stores.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression import CompressedField, get_codec
+from repro.compression.api import decode_stacked_payloads
+from repro.compression.transform import TOTAL_PLANES
+from repro.data.store import IoStats
+
+
+@partial(jax.jit, static_argnames=("padded_shape", "shape"))
+def _gather_decode(payload, emax, nplanes, idx, padded_shape, shape):
+    """Standalone jitted gather+decode (the ``get_batch`` compatibility path;
+    the train loop instead traces :meth:`DeviceResidentCompressedStore.
+    decode_indices` straight into its fused step)."""
+    return decode_stacked_payloads(payload[idx], emax[idx], padded_shape,
+                                   shape, nplanes=nplanes[idx])
+
+
+class DeviceResidentCompressedStore:
+    """ArrayStore whose compressed payload lives in device memory.
+
+    Build with :meth:`from_store` (upload an existing sharded/on-disk store
+    once) or :meth:`from_samples` (encode in memory; keeps true per-block
+    plane counts).  Implements the ``ArrayStore`` protocol -- ``get_batch``
+    accepts host indices and returns decoded (B, ...) float32, bit-identical
+    to the source store -- plus the fused seam:
+
+      ``decode_indices(idx)``  -- jit-traceable: device idx -> decoded batch
+      ``arrays``               -- the resident (payload, emax, nplanes) triple
+
+    ``shard_size`` (when built from a sharded store) is carried over so
+    ``make_loader`` produces the exact same shard-aware batch order as the
+    host-streaming store -- resume manifests stay interchangeable.
+    """
+
+    def __init__(self, payload: jnp.ndarray, emax: jnp.ndarray,
+                 nplanes: jnp.ndarray, shape, padded_shape,
+                 tolerances: np.ndarray, logical_bytes_per: np.ndarray,
+                 shard_size: Optional[int] = None):
+        self.payload = jnp.asarray(payload, jnp.int32)     # (N, nb, W)
+        self.emax = jnp.asarray(emax, jnp.int32)           # (N, nb)
+        self.nplanes = jnp.asarray(nplanes, jnp.int32)     # (N, nb)
+        if self.payload.ndim != 3 or self.emax.shape != self.payload.shape[:2] \
+                or self.nplanes.shape != self.emax.shape:
+            raise ValueError(
+                f"inconsistent resident arrays: payload {self.payload.shape}, "
+                f"emax {self.emax.shape}, nplanes {self.nplanes.shape}")
+        self.shape = tuple(shape)
+        self._padded_shape = tuple(padded_shape)
+        self.num_samples = int(self.payload.shape[0])
+        self.nb = int(self.payload.shape[1])
+        self.sample_nbytes = int(np.prod(self.shape)) * 4
+        self.tolerances = np.asarray(tolerances, np.float32)
+        self.logical_bytes_per = np.asarray(logical_bytes_per, np.int64)
+        self.logical_bytes = int(self.logical_bytes_per.sum())
+        self.shard_size = shard_size        # None: flat (non-shard-aware) order
+        self.stats = IoStats()
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_store(cls, store) -> "DeviceResidentCompressedStore":
+        """One-time upload of a ``ShardedCompressedStore`` (disk or memory).
+
+        Per-block plane counts are not stored in shard records (planes beyond
+        each block's count are zero by construction), so the resident
+        ``nplanes`` is the per-sample word width * 2 -- masking with it is a
+        no-op on the stored zeros, which is exactly what bit-exactness needs.
+        """
+        n, nb = store.num_samples, store.nb
+        wmax = int(max(store.widths)) if n else 1
+        payload = np.zeros((n, nb, wmax), np.int32)
+        emax = np.empty((n, nb), np.int32)
+        for i in range(n):
+            words = store._shard_words(store.shard_of(i))
+            off, w = int(store._offsets[i]), int(store.widths[i])
+            rec = np.asarray(words[off:off + nb * (w + 1)])
+            payload[i, :, :w] = rec[:nb * w].reshape(nb, w)
+            emax[i] = rec[nb * w:]
+        nplanes = np.minimum(2 * store.widths, TOTAL_PLANES)[:, None] \
+            .astype(np.int32) * np.ones((1, nb), np.int32)
+        return cls(payload, emax, nplanes, store.shape, store._padded_shape,
+                   store.tolerances, store.logical_bytes_per,
+                   shard_size=store.shard_size)
+
+    @classmethod
+    def from_samples(cls, samples: Sequence[np.ndarray] | np.ndarray,
+                     tolerances: Sequence[float] | np.ndarray,
+                     shard_size: Optional[int] = None, codec=None,
+                     ) -> "DeviceResidentCompressedStore":
+        """Encode in memory and keep TRUE per-block plane counts (the
+        variable-``nplanes`` decode path, exercised block by block)."""
+        xs = jnp.asarray(np.stack([np.asarray(s, np.float32)
+                                   for s in samples]))
+        tols = np.asarray(tolerances, np.float32)
+        if codec is None:
+            codec = get_codec("fixed_accuracy")
+        cf = codec.encode_batch(xs, jnp.asarray(tols))
+        return cls.from_compressed(cf, tols, nbytes=codec.nbytes(cf),
+                                   shard_size=shard_size)
+
+    @classmethod
+    def from_compressed(cls, cf: CompressedField, tolerances,
+                        nbytes=None, shard_size: Optional[int] = None
+                        ) -> "DeviceResidentCompressedStore":
+        """Wrap a batched ``CompressedField`` (leading sample axis) whose
+        arrays may already live on device -- nothing is re-encoded.  Payload
+        words beyond each sample's kept planes are dropped to the store-wide
+        max width (they are zero by construction)."""
+        from repro.compression import compressed_nbytes_batch
+        if nbytes is None:
+            nbytes = compressed_nbytes_batch(cf)
+        wmax = max(int(np.ceil(int(jnp.max(cf.nplanes)) / 2)), 1)
+        return cls(cf.payload[:, :, :wmax], cf.emax, cf.nplanes, cf.shape,
+                   cf.padded_shape, np.asarray(tolerances, np.float32),
+                   np.asarray(nbytes, np.int64), shard_size=shard_size)
+
+    # -- store protocol ------------------------------------------------------
+
+    @property
+    def stored_bytes(self) -> int:
+        return self.logical_bytes
+
+    @property
+    def resident_bytes(self) -> int:
+        """Actual device footprint of the resident arrays."""
+        return (self.payload.size + self.emax.size + self.nplanes.size) * 4
+
+    @property
+    def ratio(self) -> float:
+        return self.sample_nbytes * self.num_samples / max(self.logical_bytes, 1)
+
+    def decode_indices(self, idx) -> jnp.ndarray:
+        """Gather + decode a batch of sample indices; jit-traceable.
+
+        ``idx`` may be a traced device array -- this is the call the fused
+        train step makes inside its compiled body.
+        """
+        return decode_stacked_payloads(
+            self.payload[idx], self.emax[idx], self._padded_shape, self.shape,
+            nplanes=self.nplanes[idx])
+
+    def get_batch(self, idx: np.ndarray) -> jnp.ndarray:
+        """ArrayStore-compatible batch access (host indices accepted).
+
+        Zero host bytes are read; only decode time is accounted.  Kept for
+        drop-in use by loaders/benchmarks -- training should go through the
+        fused step in repro.train.source, which never leaves the device.
+        """
+        t0 = time.perf_counter()
+        batch = _gather_decode(self.payload, self.emax, self.nplanes,
+                               jnp.asarray(np.asarray(idx), jnp.int32),
+                               self._padded_shape, self.shape)
+        batch.block_until_ready()
+        self.stats.decode_seconds += time.perf_counter() - t0
+        self.stats.batches += 1
+        return batch

@@ -33,9 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compression import (
-    compressed_nbytes_batch, encode_fixed_accuracy_batch,
+    compressed_nbytes_batch, decode_stacked_payloads, get_codec,
 )
-from repro.core.pipeline import IoStats, _throttle, decode_stacked_payloads
+from repro.data.store import IoStats, throttle
 
 MANIFEST_NAME = "manifest.json"
 FORMAT_TAG = "repro-shards-v1"
@@ -155,10 +155,11 @@ class ShardedCompressedStore:
         self.sample_nbytes = int(np.prod(self.shape)) * 4
         self.tolerances = tolerances
 
+        codec = get_codec("fixed_accuracy")
         records, widths, logical = [], [], []
         for lo in range(0, self.num_samples, self.shard_size):
             chunk = jnp.asarray(xs[lo:lo + self.shard_size])
-            cf = encode_fixed_accuracy_batch(
+            cf = codec.encode_batch(
                 chunk, jnp.asarray(tolerances[lo:lo + self.shard_size]))
             self._padded_shape = cf.padded_shape
             recs, ws, lb = pack_sample_records(cf)
@@ -272,7 +273,7 @@ class ShardedCompressedStore:
             payload[pos, :, :w] = rec[:self.nb * w].reshape(self.nb, w)
             emax[pos] = rec[self.nb * w:]
             nbytes += rec.nbytes
-        _throttle(nbytes, t0, self.bandwidth_mbs)
+        throttle(nbytes, t0, self.bandwidth_mbs)
         t1 = time.perf_counter()
         batch = decode_stacked_payloads(payload, emax, self._padded_shape,
                                         self.shape)
@@ -282,3 +283,13 @@ class ShardedCompressedStore:
         self.stats.decode_seconds += time.perf_counter() - t1
         self.stats.batches += 1
         return batch
+
+    def as_device_resident(self):
+        """Upload the whole store to device memory once.
+
+        Returns a ``DeviceResidentCompressedStore`` whose batches gather +
+        decode inside the jitted train step — zero host bytes moved per
+        batch, decoded values bit-identical to :meth:`get_batch`.
+        """
+        from repro.data.device_store import DeviceResidentCompressedStore
+        return DeviceResidentCompressedStore.from_store(self)

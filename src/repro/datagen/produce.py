@@ -39,8 +39,7 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compression import (encode_fixed_accuracy_batch,
-                               encode_fixed_rate_batch)
+from repro.compression import codec_from_plan
 from repro.data.shards import (MANIFEST_NAME, ShardedCompressedStore,
                                _shard_filename, atomic_write_json,
                                build_manifest)
@@ -237,6 +236,7 @@ def _produce_scenario(plan: ProductionPlan, sc: ScenarioPlan, sdir: str,
                          bandwidth_mbs=bandwidth_mbs, overlap=overlap,
                          depth=queue_depth)
     params = sc.params()
+    codec = codec_from_plan(plan.codec)
     try:
         for i in sims:
             fields = run_simulation(params[i], ny=sc.spec.ny, nx=sc.spec.nx,
@@ -244,15 +244,7 @@ def _produce_scenario(plan: ProductionPlan, sc: ScenarioPlan, sdir: str,
             samples = jnp.moveaxis(fields, -1, 1)        # (T, C, H, W)
             for lo in range(0, nsnaps, size):
                 chunk = samples[lo:lo + size]
-                if plan.codec.mode == "fixed_accuracy":
-                    cf = encode_fixed_accuracy_batch(
-                        chunk, jnp.full((chunk.shape[0],),
-                                        plan.codec.tolerance, jnp.float32))
-                else:
-                    cf = encode_fixed_rate_batch(
-                        chunk, plan.codec.bits_per_value,
-                        use_pallas=plan.codec.use_pallas)
-                writer.put(i * nsnaps + lo, cf)
+                writer.put(i * nsnaps + lo, codec.encode_batch(chunk))
         writer.close()
     except BaseException:
         # a preempted/failed run leaves committed shards + progress behind

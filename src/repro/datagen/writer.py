@@ -30,7 +30,7 @@ from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core.pipeline import _throttle
+from repro.data.store import throttle
 from repro.data.shards import _shard_filename, pack_sample_records
 
 
@@ -186,7 +186,7 @@ class ShardWriter:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)                      # atomic shard commit
-        _throttle(words.nbytes, t0, self.bandwidth_mbs)
+        throttle(words.nbytes, t0, self.bandwidth_mbs)
         self.targets.discard(k)
         self.stats.bytes_written += words.nbytes
         self.stats.write_seconds += time.perf_counter() - t0

@@ -42,6 +42,31 @@ def _ref_decode_jit(payload, emax):
     return ref.zfp_decode_blocks_ref(payload, emax, payload.shape[1] * 2)
 
 
+def zfp_decode_blocks_fa(payload, emax, nplanes):
+    """Fixed-accuracy decode (per-block variable plane counts), kernel path."""
+    return zfp_codec.zfp_decode_blocks_fa(payload, emax, nplanes,
+                                          interpret=_interpret())
+
+
+def zfp_decode_blocks_fa_fast(payload, emax, nplanes):
+    """Throughput path for the fixed-accuracy decode.
+
+    Compiled Pallas on TPU, compiled jnp oracle elsewhere (interpret-mode
+    Pallas runs the kernel body in Python — correct but far too slow for the
+    device-resident training hot path).  Numerically identical to the kernel
+    path; this is what the fused gather→decode train step traces through.
+    """
+    if _interpret():
+        return _ref_decode_fa_jit(payload, emax, nplanes)
+    return zfp_codec.zfp_decode_blocks_fa(payload, emax, nplanes)
+
+
+@jax.jit
+def _ref_decode_fa_jit(payload, emax, nplanes):
+    from repro.kernels import ref
+    return ref.zfp_decode_blocks_fa_ref(payload, emax, nplanes)
+
+
 def zfp_encode_blocks(blocks, bits_per_value):
     return zfp_codec.zfp_encode_blocks(blocks, bits_per_value,
                                        interpret=_interpret())

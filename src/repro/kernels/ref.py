@@ -40,6 +40,22 @@ def zfp_decode_blocks_ref(payload: jnp.ndarray, emax: jnp.ndarray,
     return T.dequantize_blocks(qi, emax)
 
 
+def zfp_decode_blocks_fa_ref(payload: jnp.ndarray, emax: jnp.ndarray,
+                             nplanes: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-accuracy oracle: per-block plane counts mask the unpacked stream.
+
+    payload: (nb, W) int32, emax/nplanes: (nb,) int32.  Planes at or below
+    ``TOTAL_PLANES - nplanes[b]`` are zeroed before the inverse transform, so
+    a payload padded with words beyond a block's kept planes decodes exactly
+    as the truncated stream ``encode_fixed_accuracy`` produced.
+    """
+    u = T.unpack_planes(payload)
+    u = T.truncate_planes(u, nplanes.astype(jnp.int32))
+    coef = T.nb2int(u)
+    qi = T.inv_transform_2d(coef)
+    return T.dequantize_blocks(qi, emax)
+
+
 # ---------------------------------------------------------------------------
 # Flash-attention oracle (GQA, causal or full)
 # ---------------------------------------------------------------------------

@@ -133,6 +133,71 @@ def zfp_decode_blocks(payload: jnp.ndarray, emax: jnp.ndarray,
     return out[:nb]
 
 
+def _decode_fa_kernel(payload_ref, emax_ref, nplanes_ref, out_ref, *,
+                      num_words):
+    """Fixed-accuracy decode tile: per-block variable plane counts.
+
+    Identical unpack arithmetic to ``_decode_kernel`` plus an in-register
+    truncation mask derived from the per-block ``nplanes`` — the stored
+    stream keeps only the top ``nplanes[b]`` planes of block ``b``, so any
+    bits unpacked below that boundary (payloads are padded to a common word
+    width when batched) are zeroed before the inverse transform.
+    """
+    payload = payload_ref[...]                        # (BT, W) int32
+    emax = emax_ref[...]                              # (BT, 1) int32
+    npl = nplanes_ref[...]                            # (BT, 1) int32
+    lanes = _lanes16()
+    u = jnp.zeros((payload.shape[0], 16), jnp.int32)
+    for k in range(num_words):                        # static unroll
+        word = payload[:, k][:, None]                 # (BT, 1)
+        p_hi = TOTAL_PLANES - 1 - 2 * k
+        p_lo = TOTAL_PLANES - 2 - 2 * k
+        u = u | (((word >> lanes) & 1) << p_hi)
+        if p_lo >= 0:
+            u = u | (((word >> (lanes + 16)) & 1) << p_lo)
+    shift = jnp.clip(TOTAL_PLANES - npl, 0, 31)       # (BT, 1), broadcasts
+    u = u & (jnp.int32(-1) << shift)                  # zero dropped planes
+    neg = jnp.int32(_NEG)
+    coef = (u ^ neg) - neg                            # negabinary -> int
+    qi = _inv_transform_tile(coef)
+    scale = jnp.exp2((emax - Q_FIXED_POINT).astype(jnp.float32))
+    out_ref[...] = qi.astype(jnp.float32) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def zfp_decode_blocks_fa(payload: jnp.ndarray, emax: jnp.ndarray,
+                         nplanes: jnp.ndarray,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Pallas fixed-accuracy decode with per-block plane counts.
+
+    ((nb, W) int32, (nb,) int32, (nb,) int32) -> (nb, 16) f32.  This is the
+    paper's actual training-time workload: error-bounded streams whose kept
+    plane count varies block to block (``encode_fixed_accuracy``), batched
+    at a common payload width.  The word count is taken from the payload
+    shape; blocks whose ``nplanes`` is smaller simply mask deeper planes off.
+    """
+    nb, num_words = payload.shape
+    pad = (-nb) % BLOCK_TILE
+    if pad:
+        payload = jnp.pad(payload, ((0, pad), (0, 0)))
+        emax = jnp.pad(emax, ((0, pad),))
+        nplanes = jnp.pad(nplanes, ((0, pad),))
+    nbp = payload.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_decode_fa_kernel, num_words=num_words),
+        grid=(nbp // BLOCK_TILE,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_TILE, num_words), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_TILE, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, 16), jnp.float32),
+        interpret=interpret,
+    )(payload, emax[:, None], nplanes[:, None].astype(jnp.int32))
+    return out[:nb]
+
+
 # ---------------------------------------------------------------------------
 # encode
 # ---------------------------------------------------------------------------

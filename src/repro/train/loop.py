@@ -1,28 +1,31 @@
 """Surrogate training loop: store/loader-driven epochs, prefetch overlap,
-bit-exact checkpoint/restart.
+device-resident fused decode, bit-exact checkpoint/restart.
 
 The data source is anything implementing the ``ArrayStore`` protocol (raw
 in-memory fields, ``CompressedArrayStore`` online per-batch decompression --
-the paper's workflow 2 -- or a ``ShardedCompressedStore``), or a legacy
-``idx -> batch`` callable.  Batches are ordered by a ``ShardedLoader`` (or a
-``ShardAwareLoader`` matched to a sharded store's layout) and fetched on a
-``PrefetchLoader`` worker thread so host-side read + decode overlaps the
-jitted train step.
+the paper's workflow 2 -- a ``ShardedCompressedStore``, or a
+``DeviceResidentCompressedStore``), or a legacy ``idx -> batch`` callable.
+The ``BatchSource`` seam (repro.train.source) picks the backend per store:
 
-Exact-resume guarantee: every epoch's permutation is derived from
-``(seed, epoch)`` alone, and the loader state (epoch, step_in_epoch, seed)
-is written into each checkpoint manifest.  A run killed mid-epoch and
+  * host-streaming: batches are ordered by a ``ShardedLoader`` (or a
+    ``ShardAwareLoader`` matched to a sharded store's layout) and fetched on
+    a ``PrefetchLoader`` worker thread so host-side read + decode overlaps
+    the jitted train step;
+  * device-resident: the compressed payload already lives in device memory,
+    so each step ships only the (B,) index vector and gather + decode +
+    model update compile into ONE fused jitted step -- zero host bytes per
+    batch (``prefetch`` is ignored; there is nothing left to overlap).
+
+Exact-resume guarantee (both backends): every epoch's permutation is derived
+from ``(seed, epoch)`` alone, and the loader state (epoch, step_in_epoch,
+seed) is written into each checkpoint manifest.  A run killed mid-epoch and
 restarted therefore consumes the exact batches, in the exact order, at the
 exact global steps an uninterrupted run would have -- final params are
 bit-identical, and the resumed call's loss history matches the fresh run's
-post-resume entries bit-for-bit (asserted in tests/test_resume.py).  This is the
-precondition for the paper's §III variability bands: restart noise would
+post-resume entries bit-for-bit (asserted in tests/test_resume.py).  This is
+the precondition for the paper's §III variability bands: restart noise would
 otherwise pollute the run-to-run spread that serves as the compression
 yardstick.
-
-``make_loader`` and ``batch_stream`` are the building blocks shared with
-the vmapped N-seed ensemble trainer (repro.core.ensemble), which advances
-every seed model with one jitted step over the same store/loader stack.
 """
 from __future__ import annotations
 
@@ -34,7 +37,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.loader import PrefetchLoader, ShardAwareLoader, ShardedLoader
+# Re-exported building blocks (historical import location; the
+# implementations live in repro.train.source alongside the BatchSource seam).
+from repro.train.source import (batch_stream, make_batch_source,
+                                make_fused_step, make_getter, make_loader)
+from repro.data.loader import ShardedLoader
 from repro.models.surrogate import SurrogateConfig, apply_surrogate, init_surrogate, l1_loss
 from repro.train import checkpoint as ckpt
 from repro.train.optimizer import AdamConfig, adam_init, adam_update
@@ -63,65 +70,6 @@ def _train_step(params, opt_state, cond, target, cfg: SurrogateConfig,
     return params, opt_state, loss
 
 
-def make_getter(data, target_transform: Optional[Callable] = None) -> Callable:
-    """Batch getter for a data source: ``ArrayStore.get_batch`` or a legacy
-    ``idx -> batch`` callable, optionally post-processed by
-    ``target_transform``.  The single implementation of the data-source seam,
-    shared by ``train_surrogate`` and the ensemble trainer.
-    """
-    get = data.get_batch if hasattr(data, "get_batch") else data
-    if target_transform is not None:
-        get = (lambda base: lambda idx: target_transform(base(idx)))(get)
-    return get
-
-
-def make_loader(data, num_samples: Optional[int], batch_size: int,
-                seed: int) -> ShardedLoader:
-    """Loader matched to a data source: shard-aware for sharded stores,
-    plain ``ShardedLoader`` otherwise.  Shared by ``train_surrogate`` and
-    the per-member loaders of ``repro.core.ensemble.train_ensemble``, so a
-    single-run and an ensemble member with the same seed consume identical
-    batch streams.
-    """
-    n = getattr(data, "num_samples", num_samples)
-    if n is None:
-        raise ValueError("num_samples is required when the data source is a "
-                         "callable rather than an ArrayStore")
-    if hasattr(data, "shard_size"):  # align batches with the shard layout
-        return ShardAwareLoader.for_store(data, batch_size, seed=seed)
-    return ShardedLoader(n, batch_size, seed=seed)
-
-
-def batch_stream(loader, fetch: Callable, epochs: Optional[int],
-                 prefetch: int):
-    """Yield ``(loader_state_at_draw, fetch(idx))`` for every batch.
-
-    The single stream assembly behind ``train_surrogate`` and
-    ``train_ensemble``: snapshots the loader state when each batch is drawn
-    (the exact-resume contract -- with prefetch the live loader runs ahead
-    of consumption) and, when ``prefetch > 0``, runs ``fetch`` on a
-    ``PrefetchLoader`` worker thread so host read + decode overlaps the
-    jitted step.  The generator's ``close()`` (or garbage collection) shuts
-    the worker down, so abandoning iteration never leaks the thread.
-    """
-    def _snapshots():
-        for idx in loader.iter_epochs(epochs):
-            yield dict(loader.state()), idx
-
-    def _fetch(item):
-        lstate, idx = item
-        return lstate, fetch(idx)
-
-    if prefetch > 0:
-        pl = PrefetchLoader(_snapshots(), _fetch, depth=prefetch)
-        try:
-            yield from pl
-        finally:
-            pl.close()
-    else:
-        yield from map(_fetch, _snapshots())
-
-
 def _save(train_cfg: "TrainConfig", step: int, params, opt_state,
           loader_state: dict) -> None:
     ckpt.save_checkpoint(
@@ -141,21 +89,23 @@ def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     """Train; returns (params, loss_history).
 
     ``data`` is the compression seam: an ArrayStore (``get_batch(idx)`` --
-    raw memmap or online ZFP decode), a produced-dataset path from
-    ``repro.datagen.produce`` (resolved to its ``ShardedCompressedStore``;
-    produced stores are channels-first, so pass
+    raw memmap, online ZFP decode, or a ``DeviceResidentCompressedStore``
+    whose gather + decode fuse into the jitted step), a produced-dataset
+    path from ``repro.datagen.produce`` (resolved to its
+    ``ShardedCompressedStore``; produced stores are channels-first, so pass
     ``target_transform=channels_last`` and conditions from
     ``repro.datagen.scenario_conditions``), or a legacy
     ``idx -> (B, H, W, F)`` callable (then ``num_samples`` is required).
     ``target_transform`` post-processes fetched batches (e.g. channels-first
-    stores feeding the channels-last model).  ``loader`` overrides the
-    auto-built one -- pass a ``ShardAwareLoader`` with host_id/num_hosts for
-    multi-host training.
+    stores feeding the channels-last model); it must be jit-traceable for
+    device-resident stores.  ``loader`` overrides the auto-built one -- pass
+    a ``ShardAwareLoader`` with host_id/num_hosts for multi-host training.
     """
     if isinstance(data, str):
         from repro.datagen import resolve_store
         data = resolve_store(data)
-    get_targets = make_getter(data, target_transform)
+    source = make_batch_source(data, conditions, target_transform,
+                               num_samples)
     opt_cfg = AdamConfig(lr=train_cfg.lr)
     key = jax.random.PRNGKey(train_cfg.seed)
     if params is None:
@@ -182,21 +132,31 @@ def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     if train_cfg.max_steps is not None and step >= train_cfg.max_steps:
         return params, []               # already at the preemption point
 
-    conditions = jnp.asarray(conditions)
+    device_path = source.kind == "device"
+    if device_path:
+        # the fused step consumes raw indices; decode happens in-jit against
+        # the resident payload, so there is no host work to prefetch
+        fused_step = make_fused_step(source, model_cfg, opt_cfg)
+        prefetch = 0
+    else:
+        prefetch = train_cfg.prefetch
+
     # ``last_state`` is the loader position to store in the next checkpoint.
     # With prefetch the live loader runs ahead of consumption, so each batch
     # carries the state snapshot taken when it was drawn.
     last_state = dict(loader.state())
 
-    stream = batch_stream(loader,
-                          lambda idx: (conditions[idx], get_targets(idx)),
-                          train_cfg.epochs, train_cfg.prefetch)
+    stream = batch_stream(loader, source.fetch, train_cfg.epochs, prefetch)
     losses = []
     saved_step = -1
     try:
-        for lstate, (cond, target) in stream:
-            params, opt_state, loss = _train_step(
-                params, opt_state, cond, target, model_cfg, opt_cfg)
+        for lstate, item in stream:
+            if device_path:
+                params, opt_state, loss = fused_step(params, opt_state, item)
+            else:
+                cond, target = item
+                params, opt_state, loss = _train_step(
+                    params, opt_state, cond, target, model_cfg, opt_cfg)
             step += 1
             last_state = lstate
             if step % train_cfg.log_every == 0:

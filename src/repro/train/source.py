@@ -1,0 +1,319 @@
+"""BatchSource abstraction: the seam between loaders and the train step.
+
+Two backends, selected per store by ``make_batch_source`` /
+``make_ensemble_source``:
+
+  * **host-streaming** -- the historical path: an ``ArrayStore`` (or legacy
+    callable) is read + decoded on the host per batch, optionally on a
+    ``PrefetchLoader`` worker thread that overlaps the jitted step; the
+    ensemble variant fetches the deduplicated union of member indices once
+    for a shared store, or per-member for per-candidate stores.
+  * **device-resident** -- a ``DeviceResidentCompressedStore``: the whole
+    compressed dataset already lives in device memory, so a "fetch" is just
+    the (B,) int32 index upload and gather + decode + model update run as
+    ONE jitted step (``make_fused_step`` / ``make_fused_ensemble_step``).
+    Zero host bytes move per batch; the vmapped N-seed ensemble shares a
+    single resident payload, gathering each member's batch inside the vmap.
+
+``make_getter`` / ``make_loader`` / ``batch_stream`` (previously in
+``train.loop``) live here so both ``train_surrogate`` and the ensemble
+trainer assemble their streams from the identical building blocks --
+exact-resume state snapshotting included.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.device_store import DeviceResidentCompressedStore
+from repro.data.loader import PrefetchLoader, ShardAwareLoader, ShardedLoader
+from repro.models.surrogate import SurrogateConfig, l1_loss
+from repro.train.optimizer import AdamConfig, adam_update
+
+
+# ---------------------------------------------------------------------------
+# shared building blocks (getter / loader / stream assembly)
+# ---------------------------------------------------------------------------
+
+def make_getter(data, target_transform: Optional[Callable] = None) -> Callable:
+    """Batch getter for a host-streaming data source: ``ArrayStore.get_batch``
+    or a legacy ``idx -> batch`` callable, optionally post-processed by
+    ``target_transform``."""
+    get = data.get_batch if hasattr(data, "get_batch") else data
+    if target_transform is not None:
+        get = (lambda base: lambda idx: target_transform(base(idx)))(get)
+    return get
+
+
+def make_loader(data, num_samples: Optional[int], batch_size: int,
+                seed: int) -> ShardedLoader:
+    """Loader matched to a data source: shard-aware for sharded stores
+    (including device-resident uploads of them, so batch order -- and hence
+    resume manifests -- stay interchangeable across backends), plain
+    ``ShardedLoader`` otherwise."""
+    n = getattr(data, "num_samples", num_samples)
+    if n is None:
+        raise ValueError("num_samples is required when the data source is a "
+                         "callable rather than an ArrayStore")
+    if getattr(data, "shard_size", None):  # align batches with shard layout
+        return ShardAwareLoader.for_store(data, batch_size, seed=seed)
+    return ShardedLoader(n, batch_size, seed=seed)
+
+
+def batch_stream(loader, fetch: Callable, epochs: Optional[int],
+                 prefetch: int):
+    """Yield ``(loader_state_at_draw, fetch(idx))`` for every batch.
+
+    The single stream assembly behind ``train_surrogate`` and
+    ``train_ensemble``: snapshots the loader state when each batch is drawn
+    (the exact-resume contract -- with prefetch the live loader runs ahead
+    of consumption) and, when ``prefetch > 0``, runs ``fetch`` on a
+    ``PrefetchLoader`` worker thread so host read + decode overlaps the
+    jitted step.  The generator's ``close()`` (or garbage collection) shuts
+    the worker down, so abandoning iteration never leaks the thread.
+    """
+    def _snapshots():
+        for idx in loader.iter_epochs(epochs):
+            yield dict(loader.state()), idx
+
+    def _fetch(item):
+        lstate, idx = item
+        return lstate, fetch(idx)
+
+    if prefetch > 0:
+        pl = PrefetchLoader(_snapshots(), _fetch, depth=prefetch)
+        try:
+            yield from pl
+        finally:
+            pl.close()
+    else:
+        yield from map(_fetch, _snapshots())
+
+
+# ---------------------------------------------------------------------------
+# single-model sources
+# ---------------------------------------------------------------------------
+
+class HostStreamSource:
+    """Host read + decode per batch; compatible with every ArrayStore and
+    legacy callables.  ``fetch`` returns materialized (cond, target)."""
+    kind = "host"
+
+    def __init__(self, data, conditions, target_transform=None,
+                 num_samples: Optional[int] = None):
+        self.data = data
+        self.conditions = jnp.asarray(conditions)
+        self.num_samples = getattr(data, "num_samples", num_samples)
+        self._get = make_getter(data, target_transform)
+
+    def fetch(self, idx):
+        return self.conditions[idx], self._get(idx)
+
+
+class DeviceResidentSource:
+    """Indices-only fetch; gather + decode trace into the fused step."""
+    kind = "device"
+
+    def __init__(self, store: DeviceResidentCompressedStore, conditions,
+                 target_transform=None):
+        self.store = store
+        self.conditions = jnp.asarray(conditions)
+        self.transform = target_transform
+        self.num_samples = store.num_samples
+
+    def fetch(self, idx):
+        return jnp.asarray(np.asarray(idx), jnp.int32)
+
+    def gather(self, idx, payload, emax, nplanes, conditions):
+        """Traceable: decode + transform one batch from resident arrays
+        (passed explicitly so they are jit operands, not baked-in
+        constants)."""
+        return _gather_decode_transform(idx, payload, emax, nplanes,
+                                        conditions,
+                                        self.store._padded_shape,
+                                        self.store.shape, self.transform)
+
+
+def make_batch_source(data, conditions, target_transform=None,
+                      num_samples: Optional[int] = None):
+    """Source matched to the store type: device-resident stores get the
+    fused in-step decode, everything else streams from the host."""
+    if isinstance(data, DeviceResidentCompressedStore):
+        return DeviceResidentSource(data, conditions, target_transform)
+    return HostStreamSource(data, conditions, target_transform, num_samples)
+
+
+def _gather_decode_transform(idx, payload, emax, nplanes, conditions,
+                             padded_shape, shape, transform):
+    """Traceable member gather + decode + layout transform."""
+    from repro.compression.api import decode_stacked_payloads
+    tgt = decode_stacked_payloads(payload[idx], emax[idx], padded_shape,
+                                  shape, nplanes=nplanes[idx])
+    if transform is not None:
+        tgt = transform(tgt)
+    return conditions[idx], tgt
+
+
+# The fused steps are MODULE-LEVEL jitted functions keyed on the static
+# configuration (model/opt config, sample geometry, transform fn), not
+# per-call closures: repeated train_surrogate / train_ensemble invocations
+# against same-shaped stores hit the compile cache instead of retracing.
+
+@partial(jax.jit, static_argnames=("cfg", "opt_cfg", "padded_shape", "shape",
+                                   "transform"))
+def _fused_step(params, opt_state, idx, payload, emax, nplanes, conditions,
+                cfg: SurrogateConfig, opt_cfg: AdamConfig, padded_shape,
+                shape, transform):
+    cond, target = _gather_decode_transform(idx, payload, emax, nplanes,
+                                            conditions, padded_shape, shape,
+                                            transform)
+    loss, grads = jax.value_and_grad(l1_loss)(params, cfg, cond, target)
+    params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
+    return params, opt_state, loss
+
+
+def make_fused_step(source: DeviceResidentSource, cfg: SurrogateConfig,
+                    opt_cfg: AdamConfig) -> Callable:
+    """ONE jitted step: payload gather -> kernel decode -> loss/grad ->
+    Adam update.  The resident arrays enter as explicit operands (device
+    buffers passed by reference every call -- no per-step host transfer
+    beyond the (B,) index vector)."""
+    store = source.store
+
+    def step(params, opt_state, idx):
+        return _fused_step(params, opt_state, idx, store.payload, store.emax,
+                           store.nplanes, source.conditions, cfg, opt_cfg,
+                           store._padded_shape, store.shape, source.transform)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# ensemble sources
+# ---------------------------------------------------------------------------
+
+class HostEnsembleSource:
+    """Union-fetch (shared store) or per-member fetch, on the host.
+
+    For a shared store each step fetches the union of the members' index
+    batches once -- deduplicated read + decode -- and scatters it back per
+    member, so the data path stays one ``get_batch`` per step regardless of
+    the member count.
+    """
+    kind = "host"
+
+    def __init__(self, sources: Sequence, conditions, target_transform=None,
+                 per_member: bool = False):
+        self.conditions = jnp.asarray(conditions)
+        self.per_member = per_member
+        self._getters = [make_getter(s, target_transform) for s in sources]
+
+    def fetch(self, idx_stack):
+        if self.per_member:
+            return (self.conditions[idx_stack],
+                    jnp.stack([g(idx_stack[m])
+                               for m, g in enumerate(self._getters)]))
+        uniq, inv = np.unique(idx_stack, return_inverse=True)
+        batch = jnp.asarray(self._getters[0](uniq))
+        return self.conditions[idx_stack], batch[inv.reshape(idx_stack.shape)]
+
+
+class DeviceEnsembleSource:
+    """All members gather from ONE resident payload inside the vmapped step.
+
+    Shared store: the resident arrays carry no member axis; every member
+    gathers its own indices from the same buffers (``in_axes=None``).
+    Per-member stores (one lossy store per tolerance candidate): payloads
+    are padded to a common width and stacked with a leading member axis,
+    still uploaded once for the whole sweep.
+    """
+    kind = "device"
+
+    def __init__(self, stores, conditions, target_transform=None,
+                 per_member: bool = False):
+        self.conditions = jnp.asarray(conditions)
+        self.transform = target_transform
+        self.per_member = per_member
+        stores = list(stores) if per_member else [stores]
+        self.stores = stores
+        shapes = {(s.shape, s._padded_shape, s.nb, s.num_samples)
+                  for s in stores}
+        if len(shapes) != 1:
+            raise ValueError("per-member device stores must agree on sample "
+                             f"geometry; got {sorted(map(str, shapes))}")
+        self.shape = stores[0].shape
+        self.padded_shape = stores[0]._padded_shape
+        self.num_samples = stores[0].num_samples
+        if per_member:
+            wmax = max(int(s.payload.shape[-1]) for s in stores)
+            self.payload = jnp.stack([
+                jnp.pad(s.payload,
+                        ((0, 0), (0, 0), (0, wmax - s.payload.shape[-1])))
+                for s in stores])                       # (M, N, nb, W)
+            self.emax = jnp.stack([s.emax for s in stores])
+            self.nplanes = jnp.stack([s.nplanes for s in stores])
+        else:
+            self.payload = stores[0].payload            # (N, nb, W)
+            self.emax = stores[0].emax
+            self.nplanes = stores[0].nplanes
+
+    def fetch(self, idx_stack):
+        return jnp.asarray(np.asarray(idx_stack), jnp.int32)
+
+
+def make_ensemble_source(data: Union[object, Sequence], conditions,
+                         target_transform=None):
+    """Ensemble source for one shared store or a per-member sequence;
+    device-resident when every store is device-resident."""
+    per_member = isinstance(data, (list, tuple))
+    stores = list(data) if per_member else [data]
+    if all(isinstance(s, DeviceResidentCompressedStore) for s in stores):
+        return DeviceEnsembleSource(data, conditions, target_transform,
+                                    per_member=per_member)
+    if any(isinstance(s, DeviceResidentCompressedStore) for s in stores):
+        raise ValueError("cannot mix device-resident and host-streaming "
+                         "stores in one ensemble")
+    return HostEnsembleSource(stores, conditions, target_transform,
+                              per_member=per_member)
+
+
+@partial(jax.jit, static_argnames=("cfg", "opt_cfg", "padded_shape", "shape",
+                                   "transform", "per_member"))
+def _fused_ensemble_step(params, opt_state, idx_stack, payload, emax,
+                         nplanes, conditions, cfg: SurrogateConfig,
+                         opt_cfg: AdamConfig, padded_shape, shape, transform,
+                         per_member: bool):
+    member_axes = 0 if per_member else None
+
+    def member(p, o, idx, pay, em, npl):
+        cond, target = _gather_decode_transform(idx, pay, em, npl,
+                                                conditions, padded_shape,
+                                                shape, transform)
+        loss, grads = jax.value_and_grad(l1_loss)(p, cfg, cond, target)
+        p2, o2 = adam_update(grads, o, p, opt_cfg)
+        return p2, o2, loss
+
+    return jax.vmap(member, in_axes=(0, 0, 0, member_axes, member_axes,
+                                     member_axes))(
+        params, opt_state, idx_stack, payload, emax, nplanes)
+
+
+def make_fused_ensemble_step(source: DeviceEnsembleSource,
+                             cfg: SurrogateConfig,
+                             opt_cfg: AdamConfig) -> Callable:
+    """One jitted step advancing every member: vmap of (gather -> decode ->
+    loss/grad -> Adam) over the member axis, against a single resident
+    payload (broadcast for a shared store, member-major for a sweep)."""
+    def step(params, opt_state, idx_stack):
+        return _fused_ensemble_step(params, opt_state, idx_stack,
+                                    source.payload, source.emax,
+                                    source.nplanes, source.conditions, cfg,
+                                    opt_cfg, source.padded_shape,
+                                    source.shape, source.transform,
+                                    source.per_member)
+
+    return step

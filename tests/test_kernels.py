@@ -41,6 +41,80 @@ def test_zfp_decode_matches_ref(rng, bits, n_blocks):
                                rtol=0, atol=0)
 
 
+# ---------------------------------------------------------------------------
+# fixed-accuracy decode kernel: per-block variable plane counts
+# ---------------------------------------------------------------------------
+
+def _fa_payload(rng, n_blocks, tol):
+    """Encode a mixed-scale field -> (payload, emax, nplanes, expected blocks)."""
+    from repro.compression import encode_fixed_accuracy, decode
+    from repro.compression import transform as T
+    side = int(np.ceil(np.sqrt(n_blocks)))
+    x = (np.sin(np.linspace(0, 5, side * side * 16))
+         * np.logspace(-2, 1, side * side * 16)).astype(np.float32)
+    x = x.reshape(side * 4, side * 4)
+    cf = encode_fixed_accuracy(jnp.asarray(x), tol)
+    expect = T.blockify(T.pad_to_blocks(decode(cf)))
+    return cf, expect
+
+
+@pytest.mark.parametrize("n_blocks", [1, 7, 256, 300])
+@pytest.mark.parametrize("tol", [1e-4, 1e-2, 0.5])
+def test_zfp_decode_fa_matches_ref(rng, n_blocks, tol):
+    cf, expect = _fa_payload(rng, n_blocks, tol)
+    d_ref = ref.zfp_decode_blocks_fa_ref(cf.payload, cf.emax, cf.nplanes)
+    d_k = ops.zfp_decode_blocks_fa(cf.payload, cf.emax, cf.nplanes)
+    d_f = ops.zfp_decode_blocks_fa_fast(cf.payload, cf.emax, cf.nplanes)
+    assert np.array_equal(np.asarray(d_k), np.asarray(d_ref))
+    assert np.array_equal(np.asarray(d_f), np.asarray(d_ref))
+    assert np.array_equal(np.asarray(d_k), np.asarray(expect))
+
+
+def test_zfp_decode_fa_zero_plane_blocks(rng):
+    """nplanes == 0 blocks (all-zero input) must decode to exact zeros even
+    when the shared payload width carries other blocks' words."""
+    from repro.compression import encode_fixed_accuracy
+    x = rng.standard_normal((16, 16)).astype(np.float32)
+    x[:4, :] = 0.0                       # first row of 4x4 blocks -> zeros
+    cf = encode_fixed_accuracy(jnp.asarray(x), 1e-3)
+    assert int(cf.nplanes.min()) == 0 and int(cf.nplanes.max()) > 0
+    out = np.asarray(ops.zfp_decode_blocks_fa(cf.payload, cf.emax, cf.nplanes))
+    zero_rows = np.asarray(cf.nplanes) == 0
+    assert np.all(out[zero_rows] == 0.0)
+    assert np.array_equal(
+        out, np.asarray(ref.zfp_decode_blocks_fa_ref(cf.payload, cf.emax,
+                                                     cf.nplanes)))
+
+
+def test_zfp_decode_fa_full_plane_blocks(rng):
+    """nplanes == TOTAL_PLANES (tolerance far below representable detail)
+    keeps every stored plane: the FA kernel must match the plain decode."""
+    from repro.compression import decode, encode_fixed_accuracy
+    from repro.compression import transform as T
+    x = (10.0 * rng.standard_normal((8, 8))).astype(np.float32)
+    cf = encode_fixed_accuracy(jnp.asarray(x), 1e-12)
+    assert int(cf.nplanes.max()) == T.TOTAL_PLANES
+    blocks = np.asarray(ops.zfp_decode_blocks_fa(cf.payload, cf.emax,
+                                                 cf.nplanes))
+    expect = np.asarray(T.blockify(T.pad_to_blocks(decode(cf))))
+    assert np.array_equal(blocks, expect)
+
+
+def test_zfp_decode_fa_masks_planes_below_count(rng):
+    """Unlike the fixed-rate kernel, the FA kernel must actively ZERO planes
+    beyond each block's count -- feed payloads carrying deeper planes and
+    check the mask (per-block widths varying within one call)."""
+    blocks = _blocks_from(rng, 64, "rough")
+    payload, emax = ref.zfp_encode_blocks_ref(blocks, 30)   # full-depth words
+    nplanes = jnp.asarray((np.arange(64) % 31).astype(np.int32))
+    got = ops.zfp_decode_blocks_fa(payload, emax, nplanes)
+    want = ref.zfp_decode_blocks_fa_ref(payload, emax, nplanes)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # and the masked result genuinely differs from the unmasked decode
+    unmasked = ref.zfp_decode_blocks_ref(payload, emax, 30)
+    assert not np.array_equal(np.asarray(got), np.asarray(unmasked))
+
+
 def test_zfp_fast_path_identical(rng):
     """The compiled-oracle throughput path must equal the kernel path."""
     blocks = _blocks_from(rng, 64, "rough")
