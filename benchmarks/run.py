@@ -29,6 +29,7 @@ MODULES = [
     "benchmarks.datagen_throughput",   # streaming produce: seq vs overlapped
     "benchmarks.epoch_time",           # Fig. 12 (+ device-resident row)
     "benchmarks.kernel_throughput",    # decompression-overhead substrate
+    "benchmarks.serving_throughput",   # continuous batching vs lockstep
     "benchmarks.roofline",             # §Roofline table (dry-run artifacts)
 ]
 

@@ -1,7 +1,22 @@
-"""Batched serving launcher (reduced config on host devices).
+"""Serving launcher: continuous batching under synthetic open-loop load.
+
+Drives either engine in ``repro.serving`` with the mixed-length workloads
+from ``repro.serving.loadgen``:
+
+  * ``--mode lm``        -- LM ``ServeEngine`` on a reduced decoder arch;
+  * ``--mode surrogate`` -- ``SurrogateServeEngine`` on a fresh N-member
+                            fleet (the paper's served deliverable: per-query
+                            ensemble mean + variability-band width).
+
+``--rate QPS`` switches from closed-loop (all requests at t=0, pure
+throughput) to an open-loop Poisson arrival process -- latencies then count
+queueing delay from each request's scheduled arrival.  ``--lockstep`` runs
+the chunked ``steps = max(...)`` baseline instead of continuous batching,
+for eyeballing the slot-recycling win.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --mode surrogate --rate 8
 For the production-mesh serving dry-run use repro.launch.dryrun with the
 decode_32k / long_500k cells.
 """
@@ -9,36 +24,80 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
 import jax
 
 from repro.configs import reduced_config
 from repro.models import lm
-from repro.serving import ServeEngine
-from repro.serving.engine import Request
+from repro.serving import ServeEngine, SurrogateServeEngine
+from repro.serving.loadgen import (latency_percentiles, lm_workload,
+                                   surrogate_workload)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="internlm2-1.8b")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--new-tokens", type=int, default=12)
-    args = ap.parse_args()
+def _report(tag: str, done, pct: dict, extra: str) -> None:
+    print(f"{tag}: {len(done)} completed  "
+          f"p50={pct['p50'] * 1e3:.1f}ms p99={pct['p99'] * 1e3:.1f}ms  "
+          f"{extra}")
 
+
+def serve_lm(args) -> None:
     cfg = reduced_config(args.arch)
     if cfg.encoder_layers:
         raise SystemExit("use the decode dry-run for enc-dec serving")
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, batch_slots=4, max_seq=64)
-    rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, rng.integers(4, 12)).astype(np.int32),
-                    max_new_tokens=args.new_tokens)
-            for _ in range(args.requests)]
-    done = engine.run(reqs)
+    engine = ServeEngine(params, cfg, batch_slots=args.slots,
+                         max_seq=args.max_seq)
+    reqs = lm_workload(cfg.vocab_size, args.requests,
+                       rate_qps=args.rate, seed=args.seed)
+    done = engine.run_lockstep(reqs) if args.lockstep else engine.run(reqs)
     for i, r in enumerate(done[:4]):
-        print(f"req {i}: prompt={r.prompt.tolist()[:6]}... -> {r.output.tolist()}")
-    print(f"{len(done)} requests, {engine.tokens_per_second:.1f} tok/s "
-          f"(CPU smoke; production numbers come from the TPU mesh)")
+        print(f"req {i}: prompt[{len(r.prompt)}]={r.prompt.tolist()[:6]}... "
+              f"-> {r.output.tolist()}")
+    _report("lm" + ("/lockstep" if args.lockstep else ""),
+            done, latency_percentiles(done),
+            f"{engine.tokens_per_second:.1f} decode tok/s "
+            f"({engine.prefill_tokens_per_second:.0f} prefill tok/s, "
+            f"util={engine.slot_utilization:.2f}; CPU smoke -- production "
+            f"numbers come from the TPU mesh)")
+
+
+def serve_surrogate(args) -> None:
+    from repro.core.ensemble import init_ensemble
+    from repro.models.surrogate import SurrogateConfig
+    cfg = SurrogateConfig(height=32, width=16, base_channels=32)
+    members = init_ensemble(cfg, list(range(args.members)))
+    engine = SurrogateServeEngine(members, cfg, batch_slots=args.slots)
+    queries = surrogate_workload(cfg.cond_dim - 1, args.requests,
+                                 rate_qps=args.rate, seed=args.seed)
+    done = (engine.run_lockstep(queries) if args.lockstep
+            else engine.run(queries))
+    q = next(d for d in done if d.steps > 0)
+    print(f"query: T={q.steps} mean{q.mean.shape} "
+          f"band width mean={float(q.width.mean()):.4f}")
+    _report("surrogate" + ("/lockstep" if args.lockstep else ""),
+            done, latency_percentiles(done),
+            f"{engine.queries_per_second:.1f} q/s "
+            f"util={engine.slot_utilization:.2f} "
+            f"({args.members}-member fleet, one fused dispatch/step)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("lm", "surrogate"), default="lm")
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--members", type=int, default=2,
+                    help="surrogate fleet size")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="open-loop Poisson arrival rate (qps); "
+                         "default: closed loop")
+    ap.add_argument("--lockstep", action="store_true",
+                    help="run the chunked max(...) baseline instead of "
+                         "continuous batching")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    (serve_lm if args.mode == "lm" else serve_surrogate)(args)
 
 
 if __name__ == "__main__":

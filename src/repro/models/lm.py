@@ -442,18 +442,44 @@ def _causal_conv(x, w, conv_state=None):
 
 
 def ssm_block(lp, x, cfg: ArchConfig, conv_state=None, ssm_state=None,
-              chunk=256):
-    """Mamba2 block.  x: (B, S, D).  Returns (y, (conv_state, ssm_state))."""
+              chunk=256, pad_mask=None):
+    """Mamba2 block.  x: (B, S, D).  Returns (y, (conv_state, ssm_state)).
+
+    ``pad_mask`` (B, S) bool, True = real token: padding positions contribute
+    nothing to the recurrent state (conv input zeroed, dt zeroed so the SSM
+    state neither decays nor updates across pads) -- required for serving
+    right-padded mixed-length prompt batches.
+    """
     nh, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     di = nh * p
     zxbcdt = jnp.einsum("bsd,de->bse", x, lp["ssm_in"])
     z, xin, bm, cm, dt = jnp.split(
         zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
     xbc = jnp.concatenate([xin, bm, cm], -1)
+    if pad_mask is not None:
+        xbc = jnp.where(pad_mask[..., None], xbc, 0)
+    xbc_in = xbc
     xbc, new_conv = _causal_conv(xbc, lp["ssm_conv_w"], conv_state)
+    if pad_mask is not None:
+        # the cached conv window must end at each slot's LAST REAL token,
+        # not at the right-pad zeros: gather the per-slot (K-1)-wide window
+        # [len-K+1, len) from the left-extended input, which is exactly the
+        # state a solo unpadded prefill of that prompt would leave
+        kk = lp["ssm_conv_w"].shape[0]
+        lens = jnp.sum(pad_mask.astype(jnp.int32), axis=1)
+        prefix = (jnp.zeros_like(xbc_in[:, :kk - 1]) if conv_state is None
+                  else conv_state.astype(xbc_in.dtype))
+        xp = jnp.concatenate([prefix, xbc_in], 1)
+        cols = lens[:, None] + jnp.arange(kk - 1, dtype=jnp.int32)[None]
+        new_conv = jnp.take_along_axis(xp, cols[:, :, None], axis=1)
     xbc = jax.nn.silu(xbc)
     xin, bm, cm = jnp.split(xbc, [di, di + n], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["ssm_dt_bias"])
+    if pad_mask is not None:
+        # dt=0 freezes the state through pads: dA = exp(0 * a) = 1 and the
+        # update term x*dt vanishes, so state after the last real token is
+        # identical to a solo (unpadded) prefill of the same prompt
+        dt = jnp.where(pad_mask[..., None], dt, 0.0)
     xh = xin.reshape(*xin.shape[:2], nh, p)
     if x.shape[1] == 1 and ssm_state is not None:
         # single-token decode: direct state update
@@ -498,8 +524,17 @@ def attn_block(lp, x, cfg: ArchConfig, positions, *, causal=True,
     v = _constrain(v, DP, None, "model", None)
     if kv_cache is not None:
         ck, cv = kv_cache
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, 1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, 1)
+        if jnp.ndim(cache_pos) == 0:
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, 1)
+        else:
+            # per-slot write positions (continuous batching: slots decode at
+            # independent depths); rows land at cache_pos[b] .. cache_pos[b]+s
+            rows = jnp.arange(ck.shape[0], dtype=jnp.int32)[:, None]
+            cols = cache_pos[:, None] + jnp.arange(k.shape[1],
+                                                   dtype=jnp.int32)[None]
+            ck = ck.at[rows, cols].set(k.astype(ck.dtype))
+            cv = cv.at[rows, cols].set(v.astype(cv.dtype))
         sk = ck.shape[1]
         kpos = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None],
                                 (x.shape[0], sk))
@@ -520,8 +555,14 @@ def attn_block(lp, x, cfg: ArchConfig, positions, *, causal=True,
 
 
 def decoder_layer(lp, x, cfg: ArchConfig, positions, *, is_global=None,
-                  enc_out=None, cache=None, cache_pos=None):
-    """One decoder layer.  Returns (x, new_cache, aux_loss)."""
+                  enc_out=None, cache=None, cache_pos=None, pad_mask=None):
+    """One decoder layer.  Returns (x, new_cache, aux_loss).
+
+    ``cache_pos`` may be a scalar (uniform write position, the historical
+    prefill/lockstep-decode contract) or a (B,) vector of per-slot positions
+    (continuous-batching decode: every slot sits at its own depth).
+    ``pad_mask`` (B, S) marks real tokens in a right-padded prefill batch.
+    """
     lp = _gather_weights(lp)
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = {}
@@ -536,7 +577,8 @@ def decoder_layer(lp, x, cfg: ArchConfig, positions, *, is_global=None,
         y, (conv_s, ssm_s) = ssm_block(
             lp, h, cfg,
             conv_state=None if cache is None else cache["conv"],
-            ssm_state=None if cache is None else cache["ssm"])
+            ssm_state=None if cache is None else cache["ssm"],
+            pad_mask=pad_mask)
         if cache is not None:
             new_cache.update(conv=conv_s, ssm=ssm_s.astype(cache["ssm"].dtype))
         x = x + y
@@ -547,7 +589,8 @@ def decoder_layer(lp, x, cfg: ArchConfig, positions, *, is_global=None,
         y_ssm, (conv_s, ssm_s) = ssm_block(
             lp, h, cfg,
             conv_state=None if cache is None else cache["conv"],
-            ssm_state=None if cache is None else cache["ssm"])
+            ssm_state=None if cache is None else cache["ssm"],
+            pad_mask=pad_mask)
         if cache is not None:
             new_cache.update(k=kv[0], v=kv[1], conv=conv_s,
                              ssm=ssm_s.astype(cache["ssm"].dtype))
@@ -738,14 +781,29 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
 
 
 def lm_prefill(params, cfg: ArchConfig, batch, max_seq: int,
-               cache_dtype=jnp.bfloat16):
+               cache_dtype=jnp.bfloat16, prompt_lens=None):
     """Inference prefill: run the full prompt, emit (last-token logits, cache).
 
     The cache is written in place at position 0 (dynamic_update_slice), so
     the lowered HLO is the real serving prefill, not a training forward.
+
+    ``prompt_lens`` (B,) int32 serves a RIGHT-padded mixed-length prompt
+    batch: logits come from each slot's own last real token (not column -1),
+    causal masking keeps real queries from attending the trailing pads, and
+    SSM/hybrid recurrent state is pad-masked so every slot's cache is
+    identical to a solo unpadded prefill of its prompt.  Decode then resumes
+    per slot at position ``prompt_lens[b]`` (vector ``pos`` in
+    ``serve_step``), overwriting each pad cache entry before the causal mask
+    can ever expose it.
     """
     x, positions = _embed_inputs(params, cfg, batch)
     b = x.shape[0]
+    pad_mask = None
+    if prompt_lens is not None:
+        prompt_lens = jnp.asarray(prompt_lens, jnp.int32)
+        pad_mask = (jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+                    < prompt_lens[:, None])
+        x = jnp.where(pad_mask[..., None], x, 0)
     enc_out = None
     if cfg.encoder_layers:
         ex = jnp.einsum("bsf,fd->bsd",
@@ -765,21 +823,33 @@ def lm_prefill(params, cfg: ArchConfig, batch, max_seq: int,
         lp, lcache, is_global = xs
         h2, new_cache, _ = decoder_layer(lp, h, cfg, positions,
                                          is_global=is_global, enc_out=enc_out,
-                                         cache=lcache, cache_pos=0)
+                                         cache=lcache, cache_pos=0,
+                                         pad_mask=pad_mask)
         return h2, new_cache
 
     x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, flags))
-    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    if prompt_lens is None:
+        x = x[:, -1:]
+    else:                       # each slot's own last real token
+        idx = jnp.broadcast_to((prompt_lens - 1)[:, None, None],
+                               (b, 1, x.shape[-1]))
+        x = jnp.take_along_axis(x, idx, axis=1)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = jnp.einsum("bsd,dv->bsv", x, _head_weight(params, cfg))
     return logits[:, 0].astype(jnp.float32), new_cache
 
 
 def serve_step(params, cfg: ArchConfig, cache, tokens, pos, enc_out=None):
     """One decode step.  tokens: (B,) int32; pos: scalar int32 (current
-    length).  Returns (logits (B, V), new_cache)."""
+    length, uniform across the batch) or (B,) int32 vector of PER-SLOT
+    lengths -- the continuous-batching contract, where recycled slots sit at
+    independent generation depths.  Returns (logits (B, V), new_cache)."""
     x = jnp.take(params["embed"], tokens[:, None], axis=0)
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    if jnp.ndim(pos) == 0:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    else:
+        positions = pos.astype(jnp.int32)[:, None]
     flags = _global_flags(cfg)
 
     def body(h, xs):

@@ -1,3 +1,6 @@
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.surrogate_engine import SurrogateQuery, SurrogateServeEngine
 
-__all__ = ["ServeEngine"]
+__all__ = ["Request", "ServeEngine", "SlotScheduler", "SurrogateQuery",
+           "SurrogateServeEngine"]
