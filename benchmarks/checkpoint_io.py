@@ -1,0 +1,165 @@
+"""Checkpoint IO on the Codec seam: stored bytes and save/restore wall-clock
+for raw vs codec-founded lossy checkpoints, plus the gradient-exchange
+collective-bytes table (``tree_collective_bytes``) the dryrun pairing rows
+build on.
+
+Rows:
+  checkpoint_io/<mode>     -- save+restore wall-clock of a real surrogate
+                              train state (params + adam moments) per codec:
+                              raw, fixed_rate@13, fixed_accuracy with
+                              Algorithm-1-certified per-leaf tolerances
+                              (displacement measured from real train steps),
+                              and fixed_accuracy+residual.  Derived metrics:
+                              stored/raw ratio, save_s, restore_s, max
+                              restore error (and certified-bound slack).
+  grad_collective/<codec>  -- exact on-the-wire bytes of the same param tree
+                              compressed through the gradient-exchange seam
+                              (repro.core.grad_compress.tree_collective_bytes)
+                              vs the raw all-reduce volume.
+
+``--smoke`` shrinks the state and epochs to CI scale and gates on the lossy
+checkpoint actually being smaller than raw.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import shutil
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import MODEL_CFG, TRAIN_CFG
+from repro.compression import get_codec
+from repro.core.grad_compress import tree_collective_bytes
+from repro.models.surrogate import SurrogateConfig
+from repro.train import checkpoint as ckpt
+from repro.train.loop import TrainConfig, train_surrogate
+
+TMP = "/tmp/repro_ckpt_bench"
+
+
+def _train_state_with_displacement(model_cfg, train_cfg, seed=0):
+    """Train a few epochs twice (k and k+1 steps apart) so the certified
+    tolerances come from a real per-step parameter displacement, exactly as
+    the train loop's certified mode measures it."""
+    rng = np.random.default_rng(seed)
+    n = 8 * train_cfg.batch_size // 8
+    cond = rng.normal(size=(n, model_cfg.cond_dim)).astype(np.float32)
+    fields = rng.normal(size=(n, model_cfg.height, model_cfg.width,
+                              model_cfg.fields)).astype(np.float32)
+    params, _ = train_surrogate(model_cfg, train_cfg, cond,
+                                lambda i: jnp.asarray(fields[i]), n)
+    one_more = dataclasses.replace(train_cfg, epochs=train_cfg.epochs + 1)
+    params2, _ = train_surrogate(model_cfg, one_more, cond,
+                                 lambda i: jnp.asarray(fields[i]), n)
+    from repro.train.optimizer import AdamConfig, adam_init
+    state = {"params": params2, "opt": adam_init(params2, AdamConfig())}
+    return state, params, params2
+
+
+def _flat_max_err(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _bench_mode(tag, state, codec=None, tolerances=None, repeats=3):
+    root = os.path.join(TMP, tag)
+    shutil.rmtree(root, ignore_errors=True)
+    path = ckpt.save_checkpoint(root, 0, state, codec=codec,
+                                tolerances=tolerances)   # warm (jit encode)
+    t0 = time.perf_counter()
+    for step in range(1, repeats + 1):
+        path = ckpt.save_checkpoint(root, step, state, codec=codec,
+                                    tolerances=tolerances, keep=2)
+    save_s = (time.perf_counter() - t0) / repeats
+    ckpt.restore_checkpoint(path, state)                 # warm (jit decode)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out, meta = ckpt.restore_checkpoint(path, state)
+    restore_s = (time.perf_counter() - t0) / repeats
+    ratio = meta["raw_bytes"] / max(meta["stored_bytes"], 1)
+    err = _flat_max_err(out, state)
+    return out, meta, (f"ratio={ratio:.2f}x save_s={save_s:.3f}s "
+                       f"restore_s={restore_s:.3f}s max_err={err:.2e}"), (
+        save_s + restore_s)
+
+
+def run(smoke: bool = False):
+    if smoke:
+        model_cfg = SurrogateConfig(height=16, width=16, base_channels=8)
+        train_cfg = TrainConfig(epochs=2, batch_size=16, lr=1e-3, prefetch=0)
+    else:
+        model_cfg, train_cfg = MODEL_CFG, TRAIN_CFG
+    state, params_prev, params = _train_state_with_displacement(
+        model_cfg, train_cfg)
+
+    rows = []
+    _, _, derived, wall = _bench_mode("raw", state)
+    rows.append(("checkpoint_io/raw", wall * 1e6, derived))
+
+    fr = get_codec("fixed_rate", bits_per_value=13, backend="jnp")
+    _, _, derived, wall = _bench_mode("fixed_rate13", state, codec=fr)
+    rows.append(("checkpoint_io/fixed_rate13", wall * 1e6, derived))
+
+    tols = ckpt.certify_param_tolerances(params_prev, params,
+                                         min_size=256 if smoke else 4096)
+    fa = get_codec("fixed_accuracy", backend="jnp")
+    out, meta, derived, wall = _bench_mode(
+        "certified", state, codec=fa, tolerances={"params": tols})
+    certified = meta["codec"]["tolerances"]["params"]
+    worst = 0.0
+    if certified:
+        flat_in = ckpt._flatten(state["params"])
+        flat_out = ckpt._flatten(out["params"])
+        worst = max(float(np.max(np.abs(np.asarray(flat_out[k], np.float32)
+                                        - np.asarray(flat_in[k], np.float32))))
+                    / tol for k, tol in certified.items())
+    rows.append(("checkpoint_io/fixed_accuracy_certified", wall * 1e6,
+                 derived + f" certified_leaves={len(certified)} "
+                 f"bound_frac={worst:.3f}"))
+
+    res = get_codec("fixed_accuracy+residual", tolerance=1e-3, backend="jnp")
+    _, _, derived, wall = _bench_mode("residual", state, codec=res)
+    rows.append(("checkpoint_io/fixed_accuracy_residual", wall * 1e6,
+                 derived))
+
+    # --- gradient-exchange wire bytes on the same tree ---------------------
+    gtree = jax.tree.map(lambda x: x.astype(jnp.float32), state["params"])
+    raw_b, _ = tree_collective_bytes(gtree, None)
+    for name, codec in (("fixed_rate8", 8), ("fixed_rate16", 16),
+                        ("fixed_accuracy",
+                         get_codec("fixed_accuracy", tolerance=1e-3,
+                                   backend="jnp"))):
+        _, wire = tree_collective_bytes(gtree, codec)
+        rows.append((f"grad_collective/{name}", 0.0,
+                     f"raw_MB={raw_b / 1e6:.2f} wire_MB={wire / 1e6:.2f} "
+                     f"ratio={raw_b / max(wire, 1):.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale state; exits non-zero if the certified "
+                         "lossy checkpoint is not smaller than raw or "
+                         "breaks a certified bound")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    for r in rows:
+        print(",".join(map(str, r)))
+    if args.smoke:
+        by_name = {name: derived for name, _, derived in rows}
+        cert = by_name["checkpoint_io/fixed_accuracy_certified"]
+        metrics = dict(kv.split("=") for kv in cert.split()
+                       if "=" in kv)
+        if float(metrics["ratio"].rstrip("x")) <= 1.0:
+            raise SystemExit("certified lossy checkpoint not smaller than "
+                             f"raw: {cert}")
+        if float(metrics["bound_frac"]) > 1.0:
+            raise SystemExit(f"certified tolerance bound violated: {cert}")

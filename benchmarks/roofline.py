@@ -31,11 +31,45 @@ def run():
         # roofline fraction: ideal model-compute time / achieved-bound time
         ideal = r["model_flops"] / (r["n_chips"] * 197e12) if r.get("model_flops") else 0
         bound = max(t.values())
-        rows.append((f"roofline/{r['arch']}/{r['cell']}/{r['mesh']}",
+        gc = int(r.get("pod_grad_compress_bits", 0) or 0)
+        gc_tag = f"/gc{gc}" if gc else ""
+        rows.append((f"roofline/{r['arch']}/{r['cell']}/{r['mesh']}{gc_tag}",
                      bound * 1e6,
                      f"compute={t['compute_s']:.4f}s memory={t['memory_s']:.4f}s "
                      f"collective={t['collective_s']:.4f}s dom={dom[:-2]} "
                      f"useful_flops={frac:.2f} roofline_frac={ideal / bound if bound else 0:.3f}"))
+    rows.extend(gradcomp_rows())
+    return rows
+
+
+def gradcomp_rows():
+    """Codec-vs-raw pairing: for every dry-run cell that compressed the
+    cross-pod gradient exchange (``pod_grad_compress_bits > 0``, saved with a
+    ``_gc<bits>`` suffix), find its uncompressed twin (same arch/cell/mesh)
+    and report the cross-pod wire volume side by side.  The compressed
+    exchange shows up as collective-permute bytes; the raw twin carries the
+    same volume inside its all-reduce."""
+    results = [r for r in load_results() if not r.get("skipped")]
+    raw = {(r["arch"], r["cell"], r["mesh"]): r for r in results
+           if not r.get("pod_grad_compress_bits")}
+    rows = []
+    for r in results:
+        bits = int(r.get("pod_grad_compress_bits", 0) or 0)
+        if not bits:
+            continue
+        twin = raw.get((r["arch"], r["cell"], r["mesh"]))
+        perm = r["collectives"].get("collective-permute", 0.0)
+        coll_gc = r["collective_bytes_per_device"]
+        derived = (f"bits={bits} permute_MB={perm / 1e6:.1f} "
+                   f"collective_MB={coll_gc / 1e6:.1f}")
+        if twin:
+            coll_raw = twin["collective_bytes_per_device"]
+            derived += (f" collective_raw_MB={coll_raw / 1e6:.1f} "
+                        f"wire_ratio={coll_raw / max(coll_gc, 1):.2f}x "
+                        f"collective_s_saved="
+                        f"{twin['terms']['collective_s'] - r['terms']['collective_s']:.4f}s")
+        rows.append((f"roofline/gradcomp/{r['arch']}/{r['cell']}/"
+                     f"{r['mesh']}/gc{bits}", 0.0, derived))
     return rows
 
 

@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.epoch_time",           # Fig. 12 (+ device-resident row)
     "benchmarks.kernel_throughput",    # decompression-overhead substrate
     "benchmarks.serving_throughput",   # continuous batching vs lockstep
+    "benchmarks.checkpoint_io",        # codec-founded lossy checkpoints
     "benchmarks.roofline",             # §Roofline table (dry-run artifacts)
 ]
 

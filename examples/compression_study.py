@@ -20,7 +20,7 @@ from benchmarks.common import MODEL_CFG, build_study, per_sim_series
 from repro.core import band_verdict, compute_band, find_tolerance_batch
 from repro.core.ensemble import certify_tolerance
 from repro.data import ShardAwareLoader, ShardedCompressedStore
-from repro.core.pipeline import channels_last
+from repro.data.store import channels_last
 from repro.datagen import (CodecPlan, ProductionPlan, ScenarioPlan, produce,
                            scenario_conditions)
 from repro.metrics import psnr, total_momentum

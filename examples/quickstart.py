@@ -10,7 +10,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 import jax.numpy as jnp
 
-from repro.compression import compression_ratio, decode, encode_fixed_accuracy
+from repro.compression import get_codec
 from repro.core import CompressedArrayStore, find_tolerance
 from repro.models.surrogate import FieldNormalizer, SurrogateConfig, make_conditions
 from repro.sim import SimParams, run_simulation
@@ -26,11 +26,13 @@ def main():
 
     print("== 2. error-bounded compression")
     sample = jnp.asarray(np.transpose(fields[5], (2, 0, 1)))
+    codec = get_codec("fixed_accuracy", backend="jnp")
     for tol in (1e-1, 1e-2):
-        cf = encode_fixed_accuracy(sample, tol)
-        err = float(jnp.max(jnp.abs(decode(cf) - sample)))
+        cf = codec.encode_batch(sample[None], jnp.asarray([tol], jnp.float32))
+        err = float(jnp.max(jnp.abs(codec.decode_batch(cf)[0] - sample)))
+        ratio = sample.size * 4 / int(np.asarray(codec.nbytes(cf))[0])
         print(f"   tol={tol:g}: max_err={err:.2e} (bound holds: {err <= tol}) "
-              f"ratio={float(compression_ratio(cf)):.1f}x")
+              f"ratio={ratio:.1f}x")
 
     print("== 3. Algorithm 1 (model-centric tolerance, no retraining)")
     res = find_tolerance(np.asarray(sample), model_l1_error=0.05)

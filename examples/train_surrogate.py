@@ -15,7 +15,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import CompressedArrayStore, find_tolerance
-from repro.core.pipeline import RawArrayStore, channels_last
+from repro.data.store import RawArrayStore, channels_last
 from repro.metrics import mixing_layer_thickness, psnr, total_mass
 from repro.models.surrogate import (FieldNormalizer, SurrogateConfig,
                                     make_conditions)

@@ -27,11 +27,22 @@ from repro.compression.api import (
     Codec,
     FixedAccuracyCodec,
     FixedRateCodec,
+    LeafSpec,
+    ResidualCorrectedCodec,
+    ResidualCorrectedField,
+    TreeCodecMeta,
     codec_from_plan,
+    codec_from_spec,
     codec_names,
+    codec_spec,
     decode_stacked_payloads,
+    decode_tree,
+    encode_tree,
     get_codec,
+    leaf_2d_shape,
     register_codec,
+    tree_leaf_keys,
+    tree_nbytes,
 )
 
 __all__ = [
@@ -40,12 +51,18 @@ __all__ = [
     "CompressedField",
     "FixedAccuracyCodec",
     "FixedRateCodec",
+    "LeafSpec",
+    "ResidualCorrectedCodec",
+    "ResidualCorrectedField",
+    "TreeCodecMeta",
     "Q_FIXED_POINT",
     "TOTAL_PLANES",
     "blockify",
     "deblockify",
     "codec_from_plan",
+    "codec_from_spec",
     "codec_names",
+    "codec_spec",
     "compressed_nbytes",
     "compressed_nbytes_batch",
     "compression_ratio",
@@ -53,10 +70,15 @@ __all__ = [
     "decode_batch",
     "decode_fixed_rate",
     "decode_stacked_payloads",
+    "decode_tree",
     "encode_fixed_accuracy",
     "encode_fixed_accuracy_batch",
     "encode_fixed_rate",
     "encode_fixed_rate_batch",
+    "encode_tree",
     "get_codec",
+    "leaf_2d_shape",
     "register_codec",
+    "tree_leaf_keys",
+    "tree_nbytes",
 ]

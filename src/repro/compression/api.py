@@ -26,8 +26,9 @@ themselves fall back to a compiled-jnp oracle off-TPU.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Protocol, runtime_checkable
+from typing import Any, Dict, Mapping, Optional, Protocol, Tuple, runtime_checkable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,7 +43,13 @@ BACKENDS = ("jnp", "pallas")
 
 @runtime_checkable
 class Codec(Protocol):
-    """What the data/datagen/train layers require of a compression codec."""
+    """What the data/datagen/train layers require of a compression codec.
+
+    ``field_to_arrays`` / ``field_from_arrays`` are the persistence hooks:
+    they turn a codec's compressed-field container into named plain arrays
+    (and back), so manifest-writing consumers (checkpoints, stores) never
+    need to know which container class a codec returns.
+    """
     backend: str
 
     @property
@@ -53,6 +60,10 @@ class Codec(Protocol):
     def decode_batch(self, cf: CompressedField) -> jnp.ndarray: ...
 
     def nbytes(self, cf: CompressedField) -> jnp.ndarray: ...
+
+    def field_to_arrays(self, cf) -> Dict[str, np.ndarray]: ...
+
+    def field_from_arrays(self, arrays: Mapping[str, Any], shape2d): ...
 
 
 def decode_stacked_payloads(payload, emax, padded_shape, shape,
@@ -91,6 +102,29 @@ def _decode_batch_kernel(cf: CompressedField) -> jnp.ndarray:
                                    cf.shape, nplanes=cf.nplanes)
 
 
+def _pad4(shape2d) -> Tuple[int, ...]:
+    r, c = shape2d
+    return (r + (-r) % 4, c + (-c) % 4)
+
+
+def _cf_to_arrays(cf: CompressedField) -> Dict[str, np.ndarray]:
+    """Batched CompressedField -> named plain arrays, payload truncated to the
+    width its kept planes actually need (dropped words are zero by
+    construction; both decode backends accept any narrower static width)."""
+    nplanes = np.asarray(cf.nplanes)
+    w = max(int(np.ceil(int(nplanes.max(initial=0)) / 2)), 1)
+    return {"payload": np.asarray(cf.payload)[..., :w],
+            "emax": np.asarray(cf.emax), "nplanes": nplanes}
+
+
+def _cf_from_arrays(arrays: Mapping[str, Any], shape2d) -> CompressedField:
+    shape2d = tuple(int(s) for s in shape2d)
+    return CompressedField(jnp.asarray(arrays["payload"]),
+                           jnp.asarray(arrays["emax"]),
+                           jnp.asarray(arrays["nplanes"]),
+                           shape2d, _pad4(shape2d))
+
+
 @dataclasses.dataclass(frozen=True)
 class FixedAccuracyCodec:
     """Error-bounded mode: per-sample L-inf tolerances, per-block plane counts.
@@ -122,6 +156,9 @@ class FixedAccuracyCodec:
     def nbytes(self, cf: CompressedField) -> jnp.ndarray:
         return compressed_nbytes_batch(cf)
 
+    field_to_arrays = staticmethod(_cf_to_arrays)
+    field_from_arrays = staticmethod(_cf_from_arrays)
+
 
 @dataclasses.dataclass(frozen=True)
 class FixedRateCodec:
@@ -145,6 +182,134 @@ class FixedRateCodec:
 
     def nbytes(self, cf: CompressedField) -> jnp.ndarray:
         return compressed_nbytes_batch(cf)
+
+    field_to_arrays = staticmethod(_cf_to_arrays)
+    field_from_arrays = staticmethod(_cf_from_arrays)
+
+
+# ---------------------------------------------------------------------------
+# NeurLZ-style learned residual correction
+# ---------------------------------------------------------------------------
+
+_CORR_K = 6          # corrector features: bias, center, 4-neighborhood
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ResidualCorrectedField:
+    """A fixed-accuracy stream plus a tiny per-sample learned corrector.
+
+    ``weights`` ((N, K) float32) are closed-form ridge-regression
+    coefficients mapping local features of the *decoded* field to the
+    encode-time residual; ``tols`` ((N,) float32) is each sample's L-inf
+    tolerance, which also clips the correction so the certified bound
+    degrades at most to 2*tol while the realized L1 error only ever shrinks
+    (samples where correction does not help are gated to zero weights at
+    encode time).
+    """
+    base: CompressedField
+    weights: jnp.ndarray
+    tols: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.base, self.weights, self.tols), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def _corrector_features(dec: jnp.ndarray) -> jnp.ndarray:
+    """(N, ..., H, W) decoded batch -> (N, P, K) per-pixel feature rows."""
+    feats = [jnp.ones_like(dec), dec,
+             jnp.roll(dec, 1, axis=-2), jnp.roll(dec, -1, axis=-2),
+             jnp.roll(dec, 1, axis=-1), jnp.roll(dec, -1, axis=-1)]
+    f = jnp.stack(feats, axis=-1)
+    return f.reshape(dec.shape[0], -1, _CORR_K)
+
+
+def _fit_corrector(dec: jnp.ndarray, residual: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample ridge solve of features(dec) @ w ~= residual: (N, K)."""
+    a = _corrector_features(dec)                          # (N, P, K)
+    r = residual.reshape(residual.shape[0], -1)           # (N, P)
+    ata = jnp.einsum("npk,npl->nkl", a, a)
+    atr = jnp.einsum("npk,np->nk", a, r)
+    lam = 1e-6 * a.shape[1]
+    return jax.vmap(jnp.linalg.solve)(
+        ata + lam * jnp.eye(_CORR_K, dtype=ata.dtype)[None], atr)
+
+
+def _apply_corrector(dec: jnp.ndarray, weights: jnp.ndarray,
+                     tols: jnp.ndarray) -> jnp.ndarray:
+    a = _corrector_features(dec)                          # (N, P, K)
+    corr = jnp.einsum("npk,nk->np", a, weights).reshape(dec.shape)
+    clip = tols.reshape((-1,) + (1,) * (dec.ndim - 1))
+    return dec + jnp.clip(corr, -clip, clip)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidualCorrectedCodec:
+    """Fixed-accuracy codec + NeurLZ-style learned residual correction.
+
+    Encode compresses with the error-bounded codec, fits a K=6 closed-form
+    linear corrector on the decoded field's local neighborhood per sample,
+    and keeps the weights only where they reduce the realized L1 error --
+    so at any tolerance the corrected stream is at least as accurate as the
+    plain one, letting an Algorithm-1-style search accept strictly larger
+    tolerances (higher ratios) for the same model-error budget.  The
+    correction is clipped to +/-tol, bounding worst-case L-inf error by
+    2*tol.  Weight storage costs (K+1) floats per sample (counted in
+    ``nbytes``).  Registered as ``get_codec("fixed_accuracy+residual", ...)``
+    and usable by every consumer of the seam.
+    """
+    tolerance: Optional[float] = None
+    backend: str = "pallas"
+
+    @property
+    def name(self) -> str:
+        return "fixed_accuracy+residual"
+
+    @property
+    def _inner(self) -> FixedAccuracyCodec:
+        return FixedAccuracyCodec(self.tolerance, self.backend)
+
+    def encode_batch(self, xs, tolerances=None) -> ResidualCorrectedField:
+        if tolerances is None:
+            if self.tolerance is None:
+                raise ValueError("fixed_accuracy+residual encode needs "
+                                 "per-sample tolerances or a codec default")
+            tolerances = jnp.full((xs.shape[0],), self.tolerance, jnp.float32)
+        tols = jnp.asarray(tolerances, jnp.float32)
+        xs = jnp.asarray(xs, jnp.float32)
+        cf = self._inner.encode_batch(xs, tols)
+        dec = self._inner.decode_batch(cf)
+        w = _fit_corrector(dec, xs - dec)
+        axes = tuple(range(1, xs.ndim))
+        l1_plain = jnp.mean(jnp.abs(dec - xs), axis=axes)
+        l1_corr = jnp.mean(jnp.abs(_apply_corrector(dec, w, tols) - xs),
+                           axis=axes)
+        w = jnp.where((l1_corr < l1_plain)[:, None], w, jnp.zeros_like(w))
+        return ResidualCorrectedField(cf, w, tols)
+
+    def decode_batch(self, rcf: ResidualCorrectedField) -> jnp.ndarray:
+        dec = self._inner.decode_batch(rcf.base)
+        return _apply_corrector(dec, rcf.weights, rcf.tols)
+
+    def nbytes(self, rcf: ResidualCorrectedField) -> jnp.ndarray:
+        return (compressed_nbytes_batch(rcf.base)
+                + 4 * (rcf.weights.shape[-1] + 1))
+
+    def field_to_arrays(self, rcf: ResidualCorrectedField) -> Dict[str, np.ndarray]:
+        out = _cf_to_arrays(rcf.base)
+        out["weights"] = np.asarray(rcf.weights)
+        out["tols"] = np.asarray(rcf.tols)
+        return out
+
+    def field_from_arrays(self, arrays: Mapping[str, Any], shape2d):
+        return ResidualCorrectedField(_cf_from_arrays(arrays, shape2d),
+                                      jnp.asarray(arrays["weights"]),
+                                      jnp.asarray(arrays["tols"]))
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +344,23 @@ def get_codec(name: str, *, backend: str = "pallas", **params) -> Codec:
 
 register_codec("fixed_accuracy", FixedAccuracyCodec)
 register_codec("fixed_rate", FixedRateCodec)
+register_codec("fixed_accuracy+residual", ResidualCorrectedCodec)
+
+
+def codec_spec(codec: Codec) -> dict:
+    """JSON-able ``{name, backend, params}`` reconstructing ``codec`` via
+    :func:`codec_from_spec` -- the form manifests record."""
+    params = dataclasses.asdict(codec)
+    backend = params.pop("backend")
+    return {"name": codec.name, "backend": backend, "params": params}
+
+
+def codec_from_spec(spec: Mapping[str, Any],
+                    backend: Optional[str] = None) -> Codec:
+    """Inverse of :func:`codec_spec`; ``backend`` overrides the recorded one
+    (e.g. restore a jnp-encoded checkpoint through the Pallas decode path)."""
+    return get_codec(spec["name"], backend=backend or spec["backend"],
+                     **spec["params"])
 
 
 def codec_from_plan(codec_plan) -> Codec:
@@ -192,3 +374,172 @@ def codec_from_plan(codec_plan) -> Codec:
         return get_codec("fixed_rate", bits_per_value=codec_plan.bits_per_value,
                          backend=backend)
     raise ValueError(f"unknown codec mode {codec_plan.mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# tree codec: the seam grown upward to whole pytrees
+# ---------------------------------------------------------------------------
+# Gradients and checkpoints compress *pytrees* of tensors, not stacks of
+# same-shape samples.  encode_tree/decode_tree view every eligible leaf as
+# the 2D block layout the codec expects and run each through the batched
+# codec (N=1), so every backend, mode and wrapper behind get_codec applies
+# to trees unchanged.  TreeCodecMeta is the per-tree sidecar: hashable (it
+# can ride through jax.jit static arguments), derived purely from static
+# leaf shapes (so encode_tree/decode_tree trace into jitted steps), and
+# JSON-round-trippable for manifests.
+
+def leaf_2d_shape(shape) -> Tuple[int, int]:
+    """Canonical 2D block view of an arbitrary leaf shape: trailing dim is
+    kept as the fast axis; 1D leaves fold into 64 rows when divisible (vector
+    leaves pad 4x otherwise); scalars become (1, 1)."""
+    shape = tuple(int(s) for s in shape)
+    if len(shape) >= 2:
+        rows = 1
+        for s in shape[:-1]:
+            rows *= s
+        return (rows, shape[-1])
+    if len(shape) == 1 and shape[0] % 64 == 0:
+        return (64, shape[0] // 64)
+    return (1, shape[0] if shape else 1)
+
+
+def tree_leaf_keys(tree) -> list:
+    """Stable '/'-joined path key per leaf, in tree_flatten order (the same
+    naming the checkpoint manifest uses)."""
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in paths]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Static per-leaf record: path key, original shape/dtype, whether the
+    leaf went through the codec (False = carried raw)."""
+    key: str
+    shape: Tuple[int, ...]
+    dtype: str
+    compressed: bool
+
+    @property
+    def shape2d(self) -> Tuple[int, int]:
+        return leaf_2d_shape(self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeCodecMeta:
+    """Hashable + JSON-serializable sidecar for one encoded tree.
+
+    ``codec`` is the flattened ``codec_spec`` (name, backend, sorted param
+    pairs); ``leaves`` one LeafSpec per flattened leaf.  Static throughout --
+    safe as a jit static argument and cheap to embed in manifests.
+    """
+    codec: Tuple
+    leaves: Tuple[LeafSpec, ...]
+
+    def make_codec(self, backend: Optional[str] = None) -> Codec:
+        name, rec_backend, params = self.codec
+        return get_codec(name, backend=backend or rec_backend, **dict(params))
+
+    def to_json(self) -> dict:
+        name, backend, params = self.codec
+        return {"codec": {"name": name, "backend": backend,
+                          "params": dict(params)},
+                "leaves": [{"key": l.key, "shape": list(l.shape),
+                            "dtype": l.dtype, "compressed": l.compressed}
+                           for l in self.leaves]}
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, Any]) -> "TreeCodecMeta":
+        c = obj["codec"]
+        return cls((c["name"], c["backend"],
+                    tuple(sorted(c["params"].items()))),
+                   tuple(LeafSpec(l["key"], tuple(int(s) for s in l["shape"]),
+                                  l["dtype"], bool(l["compressed"]))
+                         for l in obj["leaves"]))
+
+
+def _codec_key(codec: Codec) -> Tuple:
+    spec = codec_spec(codec)
+    return (spec["name"], spec["backend"],
+            tuple(sorted(spec["params"].items())))
+
+
+def encode_tree(codec: Codec, tree, *, min_size: int = 0, tolerances=None):
+    """Compress every eligible float leaf of ``tree`` through ``codec``.
+
+    tolerances : None (codec default), a scalar applied to every leaf, or a
+        ``{leaf_key: tol}`` mapping (keys as in :func:`tree_leaf_keys`; a
+        fixed-accuracy leaf with no entry and no codec default is carried
+        raw -- the checkpoint path uses this for certified per-leaf
+        tolerances).  Ignored by fixed-rate codecs.
+    min_size : leaves smaller than this (or non-float) are carried raw.
+
+    Returns ``(encoded, meta)``: ``encoded`` is a list in tree_flatten order
+    whose entries are batched (N=1) compressed fields for compressed leaves
+    and the original leaves otherwise; ``meta`` is the :class:`TreeCodecMeta`
+    needed to invert.  Fully jit-traceable (the Python loop is over static
+    leaves).
+    """
+    flat, _ = jax.tree_util.tree_flatten(tree)
+    keys = tree_leaf_keys(tree)
+    needs_tol = (getattr(codec, "tolerance", 0) is None
+                 and codec.name.startswith("fixed_accuracy"))
+    encoded, specs = [], []
+    for key, leaf in zip(keys, flat):
+        x = jnp.asarray(leaf)
+        if isinstance(tolerances, Mapping):
+            tol = tolerances.get(key)
+        else:
+            tol = tolerances
+        eligible = (jnp.issubdtype(x.dtype, jnp.floating)
+                    and x.size >= max(min_size, 1)
+                    and not (needs_tol and tol is None))
+        spec = LeafSpec(key, tuple(int(s) for s in x.shape),
+                        jnp.dtype(x.dtype).name, bool(eligible))
+        specs.append(spec)
+        if not eligible:
+            encoded.append(leaf)
+            continue
+        x2 = x.astype(jnp.float32).reshape(spec.shape2d)
+        tols = None if tol is None else jnp.asarray([tol], jnp.float32)
+        encoded.append(codec.encode_batch(x2[None], tols))
+    return encoded, TreeCodecMeta(_codec_key(codec), tuple(specs))
+
+
+def decode_tree(encoded, meta: TreeCodecMeta, codec: Optional[Codec] = None,
+                treedef=None):
+    """Invert :func:`encode_tree`: decode every compressed entry back to its
+    original shape and dtype (raw entries pass through).  Returns a list in
+    leaf order, or the unflattened pytree when ``treedef`` is given.
+    ``codec`` defaults to the one recorded in ``meta`` (pass one explicitly
+    to pin the decode backend)."""
+    if codec is None:
+        codec = meta.make_codec()
+    out = []
+    for enc, spec in zip(encoded, meta.leaves):
+        if not spec.compressed:
+            out.append(enc)
+            continue
+        x = codec.decode_batch(enc)[0].reshape(spec.shape)
+        out.append(x.astype(spec.dtype))
+    if treedef is not None:
+        return jax.tree_util.tree_unflatten(treedef, out)
+    return out
+
+
+def tree_nbytes(codec: Codec, encoded, meta: TreeCodecMeta) -> Tuple[int, int]:
+    """(raw_bytes, stored_bytes) for one encoded tree: logical codec bytes
+    for compressed leaves, array nbytes for raw ones.  Host-side accounting
+    (not traceable) -- manifests and collective-bytes analysis use this."""
+    raw = stored = 0
+    for enc, spec in zip(encoded, meta.leaves):
+        size = 1
+        for s in spec.shape:
+            size *= s
+        leaf_bytes = size * np.dtype(spec.dtype).itemsize
+        raw += leaf_bytes
+        if spec.compressed:
+            stored += int(np.sum(np.asarray(codec.nbytes(enc))))
+        else:
+            stored += leaf_bytes
+    return raw, stored

@@ -7,9 +7,8 @@
   ensemble       -- vmapped N-seed trainer (one jitted step advances every
                     member) + certify_tolerance, the end-to-end max-benign-
                     tolerance pipeline with persisted BandArtifacts
-  pipeline       -- DEPRECATED re-exports: the stores / IoStats / ArrayStore
-                    protocol live in repro.data.store now (layering fix)
   grad_compress  -- beyond-paper: error-bounded gradient compression for DP
+                    through the unified Codec seam (error feedback + pmean)
 
 The sharded many-samples-per-file store lives in repro.data.shards, the
 device-resident store in repro.data.device_store, and the ensemble module
@@ -24,7 +23,7 @@ from repro.core.variability import (
     BandVerdict, VariabilityBand, band_contains, band_verdict, compute_band,
     dev_vs_seeds, train_seed_ensemble,
 )
-from repro.core.pipeline import (
+from repro.data.store import (
     ArrayStore, CompressedArrayStore, IoStats, RawArrayStore,
 )
 

@@ -52,12 +52,14 @@ from repro.data.loader import EnsembleLoader
 from repro.metrics import psnr, total_mass, total_momentum
 from repro.models.surrogate import (SurrogateConfig, apply_surrogate,
                                     init_surrogate, l1_loss)
-from repro.train.loop import TrainConfig
-from repro.train.source import (batch_stream, make_ensemble_source,
-                                make_fused_ensemble_step, make_loader)
-from repro.train.optimizer import AdamConfig, adam_init, adam_update
-
 TRAJECTORY_METRICS = ("l1", "psnr", "mass", "mom_x", "mom_y")
+
+# NOTE on layering: core sits BELOW train in the import order (train.checkpoint
+# consumes core.tolerance for certified lossy checkpoints), so the trainer
+# plumbing this module drives -- optimizer, BatchSource, TrainConfig -- is
+# imported lazily inside the functions that need it.  ``TrainConfig`` appears
+# only in annotations (strings under ``from __future__ import annotations``).
+# tools/check_layering.py documents this as the sanctioned back-edge.
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +80,8 @@ def ensemble_train_step(params, opt_state, cond, target, cfg: SurrogateConfig,
     cond: (N, B, cond_dim), target: (N, B, H, W, F); params/opt_state carry
     the member axis on every leaf.  Returns (params, opt_state, (N,) loss).
     """
+    from repro.train.optimizer import adam_update
+
     def member(p, o, c, t):
         loss, grads = jax.value_and_grad(l1_loss)(p, cfg, c, t)
         p2, o2 = adam_update(grads, o, p, opt_cfg)
@@ -157,6 +161,10 @@ def train_ensemble(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     exact batch order).  Checkpointing is not wired for ensembles; pass
     ``ckpt_dir=None``.
     """
+    from repro.train.optimizer import AdamConfig, adam_init
+    from repro.train.source import (batch_stream, make_ensemble_source,
+                                    make_fused_ensemble_step, make_loader)
+
     if train_cfg.ckpt_dir is not None:
         raise ValueError("ensemble training does not checkpoint; "
                          "use train_surrogate for resumable single runs")

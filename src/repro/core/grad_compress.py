@@ -4,9 +4,12 @@ The paper compresses *training data* because the model cannot learn detail
 below its own error floor.  The same argument applies one level down: SGD
 cannot exploit gradient detail below the gradient-noise floor (the
 mini-batch sampling noise -- the "training variability" of the gradient
-itself).  We therefore compress DP gradients with the fixed-rate ZFP codec
+itself).  We therefore compress DP gradients through the unified Codec seam
 before the slow cross-pod collective, with error feedback so the truncation
-residual re-enters the next step (bias-free in expectation).
+residual re-enters the next step (bias-free in expectation).  Any registered
+codec applies: fixed-rate for a guaranteed wire ratio, fixed-accuracy for an
+explicit error bound chosen by the same Algorithm-1 machinery the data path
+uses.
 
 Collective mechanics (shard_map): sum-of-codes != code-of-sum, so instead of
 all-reduce we reduce-scatter raw shards *within* a pod (fast ICI) and
@@ -16,77 +19,79 @@ bytes shrink accordingly (visible in the roofline table; see §Perf).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.compression import transform as T
+from repro.compression import (
+    Codec,
+    decode_tree,
+    encode_tree,
+    get_codec,
+    tree_nbytes,
+)
+
+CodecLike = Union[Codec, int]
 
 
-def _to_2d(g: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
-    if g.ndim >= 2:
-        return g.reshape(-1, g.shape[-1]), g.shape
-    return g.reshape(1, -1), g.shape
+def as_codec(codec: CodecLike) -> Codec:
+    """Resolve the historical ``bits`` shorthand: an int means the fixed-rate
+    codec at that many bit planes; anything else must already be a Codec."""
+    if isinstance(codec, int):
+        return get_codec("fixed_rate", bits_per_value=codec, backend="jnp")
+    return codec
 
 
-def compress_gradient(g: jnp.ndarray, bits: int):
-    """Encode one gradient tensor; returns (payload, emax, meta) arrays."""
-    g2, shape = _to_2d(g)
-    xp = T.pad_to_blocks(g2)
-    blocks = T.blockify(xp)
-    emax = T.block_emax(blocks)
-    qi = T.quantize_blocks(blocks, emax)
-    coef = T.fwd_transform_2d(qi)
-    u = T.int2nb(coef)
-    u = T.truncate_planes(u, jnp.full((blocks.shape[0],), bits, jnp.int32))
-    payload = T.pack_planes(u, (bits + 1) // 2)
-    return payload, emax, (shape, xp.shape)
+def compress_decompress(g: jnp.ndarray, codec: CodecLike) -> jnp.ndarray:
+    """Round-trip one gradient tensor through the codec (error-feedback math).
+
+    ``codec`` is a Codec or an int (fixed-rate bits, the pre-seam calling
+    convention).  Traceable; shape and dtype are preserved.
+    """
+    codec = as_codec(codec)
+    enc, meta = encode_tree(codec, g)
+    return decode_tree(enc, meta, codec=codec)[0]
 
 
-def decompress_gradient(payload, emax, meta):
-    shape, padded2d = meta
-    u = T.unpack_planes(payload)
-    coef = T.nb2int(u)
-    qi = T.inv_transform_2d(coef)
-    blocks = T.dequantize_blocks(qi, emax)
-    g2 = T.deblockify(blocks, padded2d)
-    if len(shape) == 1:
-        return g2[0, :shape[0]].reshape(shape)
-    rows = 1
-    for s in shape[:-1]:
-        rows *= s
-    return g2[:rows, :shape[-1]].reshape(shape)
-
-
-def compress_decompress(g: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """Round-trip a gradient through the codec (for error feedback math)."""
-    payload, emax, meta = compress_gradient(g, bits)
-    return decompress_gradient(payload, emax, meta)
-
-
-def compressed_psum_tree(grads, axis_name: str, bits: int, residuals=None):
+def compressed_psum_tree(grads, axis_name: str, codec: CodecLike,
+                         residuals=None, tolerances=None):
     """Error-feedback compressed mean over ``axis_name`` inside shard_map.
 
-    grads: local gradient pytree. residuals: previous step's pytree (or None).
-    Returns (mean_grads, new_residuals).
+    grads: local gradient pytree.  codec: any registered Codec (or int bits
+    for fixed-rate).  residuals: previous step's pytree (or None to start
+    from zero).  tolerances: optional per-leaf error bounds forwarded to
+    :func:`encode_tree` -- scalar or ``{leaf_key: tol}`` -- enabling
+    fixed-accuracy gradient compression.  Returns ``(mean_grads,
+    new_residuals)`` as two trees with the structure of ``grads``.
 
     Each device adds its carried residual, compresses, and the *compressed*
     tensors cross the collective; the local truncation error becomes the new
-    residual.  With bits=b the collective moves b/32 of the raw bytes.
+    residual.  Leaves the codec skips (non-float, or no tolerance resolvable
+    for a default-free fixed-accuracy codec) pass through the pmean raw with
+    a zero residual.
     """
+    codec = as_codec(codec)
     if residuals is None:
         residuals = jax.tree.map(jnp.zeros_like, grads)
 
-    def one(g, r):
-        g_fb = g + r
-        g_hat = compress_decompress(g_fb, bits)
-        new_r = g_fb - g_hat
-        g_mean = jax.lax.pmean(g_hat, axis_name)
-        return g_mean, new_r
-
-    pairs = jax.tree.map(one, grads, residuals)
-    mean = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
-    new_res = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    g_fb = jax.tree.map(lambda g, r: g + r, grads, residuals)
+    treedef = jax.tree_util.tree_structure(g_fb)
+    enc, meta = encode_tree(codec, g_fb, tolerances=tolerances)
+    g_hat = decode_tree(enc, meta, codec=codec, treedef=treedef)
+    new_res = jax.tree.map(lambda f, h: f - h, g_fb, g_hat)
+    mean = jax.tree.map(lambda h: jax.lax.pmean(h, axis_name), g_hat)
     return mean, new_res
+
+
+def tree_collective_bytes(grads, codec: Optional[CodecLike]) -> Tuple[int, int]:
+    """(raw_bytes, compressed_bytes) one gradient exchange would move across
+    the slow link.  Host-side accounting for rooflines and dryrun reports;
+    ``codec=None`` means the uncompressed baseline (raw == compressed)."""
+    if codec is None:
+        raw = sum(jnp.asarray(l).size * jnp.asarray(l).dtype.itemsize
+                  for l in jax.tree_util.tree_leaves(grads))
+        return raw, raw
+    codec = as_codec(codec)
+    enc, meta = encode_tree(codec, grads)
+    return tree_nbytes(codec, enc, meta)

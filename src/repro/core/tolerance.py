@@ -25,8 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compression import compressed_nbytes, decode, encode_fixed_accuracy
-from repro.compression.api import FixedAccuracyCodec
+from repro.compression import FixedAccuracyCodec
 
 C_D = {1: 1.044, 2: 1.089, 3: 1.134, 4: 1.178}   # Fox & Lindstrom, Appendix A
 
@@ -53,16 +52,21 @@ def find_tolerance(sample: np.ndarray, model_l1_error: float,
     """
     e = float(model_l1_error)
     x = jnp.asarray(sample, jnp.float32)
+
+    def roundtrip(t):
+        cf = _SEARCH_CODEC.encode_batch(x[None],
+                                        jnp.asarray([t], jnp.float32))
+        xd = _SEARCH_CODEC.decode_batch(cf)[0]
+        l1 = float(jnp.mean(jnp.abs(xd - x)))
+        return l1, float(x.size * 4 / int(np.asarray(_SEARCH_CODEC.nbytes(cf))[0]))
+
     t = (4.0 ** d) * e / C_D[d]
     best = None
     iters = 0
     while iters < max_iters:
         iters += 1
-        cf = encode_fixed_accuracy(x, float(t))
-        xd = decode(cf)
-        l1 = float(jnp.mean(jnp.abs(xd - x)))
+        l1, ratio = roundtrip(float(t))
         if l1 <= e:
-            ratio = float(x.size * 4 / int(compressed_nbytes(cf)))
             saturated = best is not None and ratio <= best.ratio * 1.01
             best = ToleranceResult(float(t), e, l1, ratio, iters)
             if saturated:       # all blocks at zero planes: ratio cannot grow
@@ -74,13 +78,9 @@ def find_tolerance(sample: np.ndarray, model_l1_error: float,
         while iters < max_iters:
             iters += 1
             t /= 2.0
-            cf = encode_fixed_accuracy(x, float(t))
-            xd = decode(cf)
-            l1 = float(jnp.mean(jnp.abs(xd - x)))
+            l1, ratio = roundtrip(float(t))
             if l1 <= e:
-                best = ToleranceResult(float(t), e, l1,
-                                       float(x.size * 4 / int(compressed_nbytes(cf))),
-                                       iters)
+                best = ToleranceResult(float(t), e, l1, ratio, iters)
                 break
     if best is None:
         best = ToleranceResult(float(t), e, float("inf"), 1.0, iters)

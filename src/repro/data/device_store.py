@@ -31,9 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compression import CompressedField, get_codec
-from repro.compression.api import decode_stacked_payloads
-from repro.compression.transform import TOTAL_PLANES
+from repro.compression import (CompressedField, TOTAL_PLANES,
+                               decode_stacked_payloads, get_codec)
 from repro.data.store import IoStats
 
 

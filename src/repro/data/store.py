@@ -7,8 +7,8 @@ Implements the paper's two workflows (Fig. 2):
               the Codec layer (kernel path; compiled oracle on CPU).
 
 This is the data layer's home for the ``ArrayStore`` protocol, IO accounting
-and the bandwidth throttle (they historically lived in ``core.pipeline``,
-which now only re-exports them: stores must not import *upward* from core).
+and the bandwidth throttle (they historically lived in ``core.pipeline``;
+that shim is gone -- stores must not import *upward* from core).
 All stores count bytes moved and read time so the Fig. 11/12 benchmarks can
 report data-loading throughput and per-epoch time.  The optional bandwidth
 throttle emulates the paper's three file systems (workspace / VAST / GPFS)
@@ -24,8 +24,7 @@ from typing import Optional, Protocol, Sequence, Tuple, runtime_checkable
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compression import (decode_stacked_payloads, encode_fixed_accuracy,
-                               encode_fixed_rate)
+from repro.compression import decode_stacked_payloads, get_codec
 
 
 @runtime_checkable
@@ -153,20 +152,27 @@ class CompressedArrayStore:
         self.logical_bytes = 0
         if root is not None:
             os.makedirs(root, exist_ok=True)
+        if tolerances is not None:
+            codec = get_codec("fixed_accuracy", backend="jnp")
+        else:
+            codec = get_codec("fixed_rate", bits_per_value=bits_per_value,
+                              backend="jnp")
         for i, s in enumerate(samples):
             x = jnp.asarray(np.asarray(s, np.float32))
+            tols = (None if tolerances is None
+                    else jnp.asarray([float(tolerances[i])], jnp.float32))
+            cf = codec.encode_batch(x[None], tols)
             if tolerances is not None:
-                cf = encode_fixed_accuracy(x, float(tolerances[i]))
                 w = int(np.ceil(int(jnp.max(cf.nplanes)) / 2)) or 1
-                payload = np.asarray(cf.payload)[:, :w]
-                from repro.compression import compressed_nbytes
-                self.logical_bytes += int(compressed_nbytes(cf))
+                payload = np.asarray(cf.payload)[0, :, :w]
+                self.logical_bytes += int(np.asarray(codec.nbytes(cf))[0])
             else:
-                cf = encode_fixed_rate(x, bits_per_value)
-                payload = np.asarray(cf.payload)
+                payload = np.asarray(cf.payload)[0]
                 w = payload.shape[1]
-                self.logical_bytes += payload.nbytes + cf.emax.shape[0]
-            emax = np.asarray(cf.emax, np.int32)
+                self.logical_bytes += payload.nbytes + cf.emax.shape[1]
+            emax = np.asarray(cf.emax, np.int32)[0]
+            # batched fields record the PER-SAMPLE shape (leading N only on
+            # the arrays), so padded_shape carries over unchanged
             self._padded_shape = cf.padded_shape
             if root is None:
                 self._payload.append(payload)

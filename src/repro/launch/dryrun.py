@@ -104,57 +104,76 @@ def make_train_step(cfg: ArchConfig, microbatches: int = 1):
 
 
 def make_train_step_podcompressed(cfg: ArchConfig, mesh, pspecs,
-                                  bits: int = 12):
+                                  codec=12):
     """THE PAPER'S TECHNIQUE ON THE WIRE: error-bounded ZFP compression of
     the cross-pod gradient exchange (DESIGN.md §4.3).
 
-    Within a pod, grads flow exactly as in make_train_step (GSPMD auto
-    axes, manual 'pod').  Across pods, instead of letting GSPMD all-reduce
-    raw grads over the slow inter-pod link, each device compresses its OWN
-    grad shard with the fixed-rate codec inside a nested fully-manual
-    shard_map (no resharding -- blocks align with the shard), exchanges only
-    the packed bit planes (collective-permute of int32 payloads ~ bits/32 of
-    raw volume), and both pods decode both payloads so parameters stay
-    bit-identical across pods.  Error-feedback residual carry is available
-    in repro.core.grad_compress for real training runs."""
+    Per-pod gradients are computed under plain GSPMD by vmapping the loss
+    over a pod-split batch with ``spmd_axis_name='pod'``: the model runs in
+    ordinary auto-sharded code (no manual region around it -- XLA's SPMD
+    partitioner cannot partition the layer/loss scans inside a partially
+    manual subgroup), and because the grad outputs keep their leading pod
+    dim, GSPMD only reduces within pods.  The cross-pod combine then runs in
+    a small fully-manual shard_map over just the gradient trees: each device
+    compresses its OWN grad shard through the tree-codec seam (blocks align
+    with the shard, no resharding), exchanges only the encoded fields around
+    the pod ring (collective-permute of int32 payload/emax/nplanes words
+    ~ bits/32 of raw volume for fixed-rate), and every pod decodes every
+    payload so parameters stay bit-identical across pods.  ``codec`` is any
+    registered Codec or an int (fixed-rate bits); a fixed-accuracy codec
+    makes the exchange error-bounded instead of rate-bounded.
+    Error-feedback residual carry is available in repro.core.grad_compress
+    for real training runs."""
+    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    from repro.core.grad_compress import compress_gradient, decompress_gradient
+    from repro.compression import decode_tree, encode_tree
+    from repro.core.grad_compress import as_codec
+    codec = as_codec(codec)
     opt_cfg = AdamConfig(lr=1e-4, grad_clip=1.0)
-    perm = [(0, 1), (1, 0)]
+    n_pod = int(mesh.shape["pod"])
+    perm = [(i, (i + 1) % n_pod) for i in range(n_pod)]
+    pod_specs = jax.tree.map(lambda s: P("pod", *s), pspecs,
+                             is_leaf=lambda x: isinstance(x, P))
 
-    def one(g):
-        gf = g.astype(jnp.float32)
-        payload, emax, meta = compress_gradient(gf, bits)
-        p2 = jax.lax.ppermute(payload, "pod", perm)
-        e2 = jax.lax.ppermute(emax, "pod", perm)
-        g_self = decompress_gradient(payload, emax, meta)
-        g_other = decompress_gradient(p2, e2, meta)
-        return (0.5 * (g_self + g_other)).astype(g.dtype)
-
-    def exchange_local(gtree):
-        return jax.tree.map(one, gtree)
-
-    def podwise(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(lm.lm_loss)(params, cfg, batch)
-        # nested manual region: codec on local shards, payloads on the wire
-        # mesh inferred from the enclosing (pod-manual) context
-        grads = jax.shard_map(exchange_local,
-                              in_specs=(pspecs,), out_specs=pspecs,
-                              axis_names=frozenset({"data", "model"}),
-                              check_vma=False)(grads)
-        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-        params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
-        return params, opt_state, jax.lax.pmean(loss, "pod")
+    def exchange(grads_pods):
+        # fully-manual over the whole mesh: leaves are this device's own
+        # pod's grad shard with the vmap dim reduced to size 1
+        gf = jax.tree.map(lambda g: jnp.squeeze(g, 0).astype(jnp.float32),
+                          grads_pods)
+        treedef = jax.tree_util.tree_structure(gf)
+        enc, meta = encode_tree(codec, gf)
+        acc = decode_tree(enc, meta, codec=codec)
+        for _ in range(n_pod - 1):
+            # everything the decode needs crosses the wire: CompressedField
+            # is a pytree, so one tree.map ppermutes payload/emax/nplanes
+            # (and any raw leaves the codec skipped) -- shape metadata is
+            # static, zero bytes
+            enc = jax.tree.map(lambda x: jax.lax.ppermute(x, "pod", perm),
+                               enc)
+            dec = decode_tree(enc, meta, codec=codec)
+            acc = [a + d for a, d in zip(acc, dec)]
+        mean = jax.tree_util.tree_unflatten(treedef,
+                                            [a / n_pod for a in acc])
+        # out_specs omit 'pod': every pod decoded the same payloads, so the
+        # mean is pod-replicated by construction (check_rep off)
+        return jax.tree.map(lambda m, g: m.astype(g.dtype),
+                            mean, jax.tree.map(lambda g: g[0], grads_pods))
 
     def train_step(params, opt_state, batch):
-        lm.set_constraint_exclude(("pod",))
+        lm.set_constraint_exclude(("pod",))   # vmap's spmd_axis_name owns it
         try:
-            return jax.shard_map(
-                podwise, mesh=mesh,
-                in_specs=(P(), P(), P("pod")),
-                out_specs=(P(), P(), P()),
-                axis_names=frozenset({"pod"}), check_vma=False,
-            )(params, opt_state, batch)
+            batch_pods = jax.tree.map(
+                lambda x: x.reshape(n_pod, x.shape[0] // n_pod,
+                                    *x.shape[1:]), batch)
+            losses, grads = jax.vmap(
+                lambda b: jax.value_and_grad(lm.lm_loss)(params, cfg, b),
+                spmd_axis_name="pod")(batch_pods)
+            grads = shard_map(exchange, mesh,
+                              in_specs=(pod_specs,), out_specs=pspecs,
+                              check_rep=False, auto=frozenset())(grads)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
+            return params, opt_state, jnp.mean(losses)
         finally:
             lm.set_constraint_exclude(())
 
@@ -330,6 +349,8 @@ def run_cell(arch: str, cell: ShapeCell, multi_pod: bool,
         "arch": arch, "cell": cell.name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "multi_pod": multi_pod, "n_chips": n_chips,
+        "pod_grad_compress_bits": (pod_grad_compress_bits
+                                   if cell.kind == "train" else 0),
         "compile_seconds": round(compile_s, 1),
         "flops_per_device": flops_dev,
         "bytes_per_device": bytes_dev,
@@ -371,7 +392,9 @@ def run_cell(arch: str, cell: ShapeCell, multi_pod: bool,
           f"useful={result['useful_flops_ratio']:.2f}")
     if save:
         os.makedirs(RESULTS_DIR, exist_ok=True)
-        tag = f"{arch}_{cell.name}_{result['mesh']}.json"
+        gc_tag = (f"_gc{pod_grad_compress_bits}"
+                  if result["pod_grad_compress_bits"] else "")
+        tag = f"{arch}_{cell.name}_{result['mesh']}{gc_tag}.json"
         with open(os.path.join(RESULTS_DIR, tag), "w") as f:
             json.dump(result, f, indent=1)
     return result
@@ -383,6 +406,10 @@ def main() -> None:
     ap.add_argument("--cell", default="all",
                     help=f"one of {[c.name for c in SHAPE_CELLS]} or 'all'")
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--grad-compress-bits", type=int, default=0,
+                    help="compress the cross-pod gradient exchange at this "
+                         "fixed rate (train cells on the multi-pod mesh; "
+                         "results save with a _gc<bits> suffix)")
     args = ap.parse_args()
 
     archs = list(ALL_ARCHS) if args.arch == "all" else [args.arch]
@@ -394,7 +421,8 @@ def main() -> None:
         for cell in cells:
             for mp in meshes:
                 try:
-                    run_cell(arch, cell, mp)
+                    run_cell(arch, cell, mp,
+                             pod_grad_compress_bits=args.grad_compress_bits)
                 except Exception as e:
                     failures.append((arch, cell.name, mp, str(e)[:200]))
                     print(f"[dryrun] FAIL {arch} x {cell.name} x mp={mp}: {e}")

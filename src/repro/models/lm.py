@@ -24,6 +24,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.interpreters import batching as _batching
 
 from repro.configs.base import ArchConfig
 
@@ -223,6 +224,16 @@ def _reduce_barrier(x):
 @_reduce_barrier.defjvp
 def _reduce_barrier_jvp(primals, tangents):
     return _reduce_barrier(primals[0]), tangents[0]
+
+
+# jax 0.4.37 also ships no vmap rule for the barrier; it is elementwise, so
+# batching is the identity on batch dims.  Needed for the per-pod
+# vmap(spmd_axis_name='pod') gradient path in launch/dryrun.py.
+if jax.lax.optimization_barrier_p not in _batching.primitive_batchers:
+    def _barrier_batcher(args, dims):
+        return jax.lax.optimization_barrier_p.bind(*args), dims
+    _batching.primitive_batchers[jax.lax.optimization_barrier_p] = \
+        _barrier_batcher
 
 # Per-layer gathered-weight specs: weights arrive FSDP-sharded over "data";
 # constraining them to their TP-only spec forces GSPMD into the ZeRO-3

@@ -57,6 +57,12 @@ class TrainConfig:
     ckpt_every_steps: int = 200
     ckpt_keep: int = 3
     lossy_ckpt_bits: Optional[int] = None
+    # any registered Codec instance (repro.compression.get_codec(...)); takes
+    # precedence over lossy_ckpt_bits.  A fixed-accuracy codec with no
+    # default tolerance triggers per-leaf certification at each save: the
+    # tolerance comes from Algorithm 1 run on the parameter tensors with the
+    # optimizer's own per-step displacement as the error bound.
+    ckpt_codec: Optional[object] = None
     log_every: int = 50
     prefetch: int = 2               # queue depth; 0 = synchronous fetch
     max_steps: Optional[int] = None  # simulated preemption: stop without a final save
@@ -70,14 +76,28 @@ def _train_step(params, opt_state, cond, target, cfg: SurrogateConfig,
     return params, opt_state, loss
 
 
+def _needs_certify(train_cfg: "TrainConfig") -> bool:
+    codec = train_cfg.ckpt_codec
+    return (codec is not None
+            and getattr(codec, "tolerance", 0) is None
+            and codec.name.startswith("fixed_accuracy"))
+
+
 def _save(train_cfg: "TrainConfig", step: int, params, opt_state,
-          loader_state: dict) -> None:
+          loader_state: dict, params_prev=None) -> None:
+    codec = train_cfg.ckpt_codec
+    lossy_bits = None if codec is not None else train_cfg.lossy_ckpt_bits
+    tolerances = None
+    if _needs_certify(train_cfg) and params_prev is not None:
+        tolerances = {"params": ckpt.certify_param_tolerances(
+            params_prev, params)}
     ckpt.save_checkpoint(
         train_cfg.ckpt_dir, step, {"params": params, "opt": opt_state},
         extra={"loader": dict(loader_state),
                "epoch": loader_state["epoch"],
                "seed": loader_state["seed"]},
-        lossy_bits=train_cfg.lossy_ckpt_bits, keep=train_cfg.ckpt_keep)
+        lossy_bits=lossy_bits, codec=codec, tolerances=tolerances,
+        keep=train_cfg.ckpt_keep)
 
 
 def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
@@ -146,11 +166,18 @@ def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     # carries the state snapshot taken when it was drawn.
     last_state = dict(loader.state())
 
+    # certified lossy checkpoints need the pre-step params at save time (the
+    # per-step displacement is the Algorithm-1 error bound)
+    track_prev = bool(train_cfg.ckpt_dir) and _needs_certify(train_cfg)
+    params_prev = None
+
     stream = batch_stream(loader, source.fetch, train_cfg.epochs, prefetch)
     losses = []
     saved_step = -1
     try:
         for lstate, item in stream:
+            if track_prev:
+                params_prev = params
             if device_path:
                 params, opt_state, loss = fused_step(params, opt_state, item)
             else:
@@ -165,14 +192,15 @@ def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
                 for h in hooks:
                     h(step, params, float(loss))
             if (train_cfg.ckpt_dir and step % train_cfg.ckpt_every_steps == 0):
-                _save(train_cfg, step, params, opt_state, last_state)
+                _save(train_cfg, step, params, opt_state, last_state,
+                      params_prev)
                 saved_step = step
             if train_cfg.max_steps is not None and step >= train_cfg.max_steps:
                 return params, losses   # preempted: no final save
     finally:
         stream.close()
     if train_cfg.ckpt_dir and step != saved_step:
-        _save(train_cfg, step, params, opt_state, last_state)
+        _save(train_cfg, step, params, opt_state, last_state, params_prev)
     return params, losses
 
 

@@ -150,7 +150,7 @@ def make_batch_source(data, conditions, target_transform=None,
 def _gather_decode_transform(idx, payload, emax, nplanes, conditions,
                              padded_shape, shape, transform):
     """Traceable member gather + decode + layout transform."""
-    from repro.compression.api import decode_stacked_payloads
+    from repro.compression import decode_stacked_payloads
     tgt = decode_stacked_payloads(payload[idx], emax[idx], padded_shape,
                                   shape, nplanes=nplanes[idx])
     if transform is not None:

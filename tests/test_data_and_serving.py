@@ -109,7 +109,7 @@ def test_prefetch_loader_context_manager():
 
 def test_raw_store_casts_float64_consistently(tmp_path):
     """In-memory and on-disk modes must agree on dtype and byte accounting."""
-    from repro.core.pipeline import RawArrayStore
+    from repro.data.store import RawArrayStore
     rng = np.random.default_rng(0)
     samples = [rng.standard_normal((4, 4)) for _ in range(3)]   # float64 in
     mem = RawArrayStore(samples)

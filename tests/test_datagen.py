@@ -249,7 +249,7 @@ def test_open_produced_handle(produced):
 
 
 def test_train_on_produced_path(produced):
-    from repro.core.pipeline import channels_last
+    from repro.data.store import channels_last
     from repro.models.surrogate import SurrogateConfig
     from repro.train.loop import TrainConfig, train_surrogate
     root, _ = produced

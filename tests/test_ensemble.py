@@ -18,7 +18,7 @@ import pytest
 
 from repro.core.ensemble import (BandArtifact, certify_tolerance,
                                  train_ensemble)
-from repro.core.pipeline import RawArrayStore, channels_last
+from repro.data.store import RawArrayStore, channels_last
 from repro.data.loader import EnsembleLoader, ShardedLoader
 from repro.data.shards import ShardedCompressedStore
 from repro.models.surrogate import SurrogateConfig

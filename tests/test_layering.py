@@ -1,0 +1,101 @@
+"""Import-layering lint as a fast tier-1 test (tools/check_layering.py).
+
+Locks in the dependency order the PR-5/PR-7 refactors established: kernels /
+compression below data below train & core, `core/` free of module-level
+train/serving imports, and the Codec seam as the only compression entry
+point outside compression/ + kernels/.
+"""
+import ast
+import importlib
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_layering  # noqa: E402
+
+
+def test_no_layering_violations():
+    violations = check_layering.check()
+    assert not violations, "\n".join(violations)
+
+
+def test_core_has_no_module_level_train_or_serving_imports():
+    """The specific inversion this PR fixed: core sits below train, so the
+    ensemble's trainer plumbing must be imported lazily."""
+    core_dir = os.path.join(REPO, "src", "repro", "core")
+    offenders = []
+    for fname in sorted(os.listdir(core_dir)):
+        if not fname.endswith(".py"):
+            continue
+        with open(os.path.join(core_dir, fname)) as f:
+            tree = ast.parse(f.read())
+        for node, module_level in check_layering._module_level_imports(tree):
+            if not module_level:
+                continue
+            for tgt in check_layering._imported_modules(node):
+                if tgt.startswith(("repro.train", "repro.serving")):
+                    offenders.append(f"core/{fname}:{node.lineno}: {tgt}")
+    assert not offenders, offenders
+
+
+def test_core_importable_without_train(monkeypatch):
+    """Behavioral version of the same guarantee: importing the core package
+    must not drag the train stack into sys.modules."""
+    saved = {k: v for k, v in sys.modules.items() if k.startswith("repro")}
+    for k in list(sys.modules):
+        if k.startswith("repro"):
+            del sys.modules[k]
+    try:
+        importlib.import_module("repro.core.ensemble")
+        importlib.import_module("repro.core")
+        loaded = [m for m in sys.modules
+                  if m.startswith(("repro.train", "repro.serving"))]
+        assert not loaded, loaded
+    finally:
+        sys.modules.update(saved)
+
+
+@pytest.mark.parametrize("source, fragment", [
+    ("from repro.compression.transform import pack_planes",
+     "seam-private module"),
+    ("import repro.compression.zfp", "seam-private module"),
+    ("from repro.compression import encode_fixed_rate",
+     "mode-specific codec function"),
+    ("from repro.compression.api import decode_batch",
+     "mode-specific codec function"),
+    # lazy does NOT exempt a seam bypass
+    ("def f():\n    from repro.compression import encode_fixed_accuracy\n",
+     "mode-specific codec function"),
+])
+def test_lint_catches_seam_bypasses(tmp_path, source, fragment):
+    pkg = tmp_path / "repro" / "data"
+    pkg.mkdir(parents=True)
+    (pkg / "bad.py").write_text(source)
+    violations = check_layering.check(str(tmp_path / "repro"))
+    assert violations and fragment in violations[0], violations
+
+
+def test_lint_allows_the_seam_itself(tmp_path):
+    pkg = tmp_path / "repro" / "data"
+    pkg.mkdir(parents=True)
+    (pkg / "ok.py").write_text(
+        "from repro.compression import get_codec, encode_tree, decode_tree\n"
+        "from repro.compression import CompressedField, TOTAL_PLANES\n"
+        "from repro.compression import decode_stacked_payloads\n")
+    assert check_layering.check(str(tmp_path / "repro")) == []
+
+
+def test_lint_catches_upward_module_level_import(tmp_path):
+    pkg = tmp_path / "repro" / "data"
+    pkg.mkdir(parents=True)
+    (pkg / "bad.py").write_text("from repro.train.loop import TrainConfig\n")
+    violations = check_layering.check(str(tmp_path / "repro"))
+    assert violations and "layer 'data'" in violations[0], violations
+    # the same import inside a function is the sanctioned lazy escape hatch
+    (pkg / "bad.py").write_text(
+        "def f():\n    from repro.train.loop import TrainConfig\n")
+    assert check_layering.check(str(tmp_path / "repro")) == []

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.pipeline import RawArrayStore, channels_last
+from repro.data.store import RawArrayStore, channels_last
 from repro.data import ShardedCompressedStore
 from repro.models.surrogate import SurrogateConfig
 from repro.train import checkpoint as ckpt
