@@ -48,6 +48,9 @@ import numpy as np
 from repro.core.tolerance import find_tolerance_batch
 from repro.core.variability import (BandVerdict, VariabilityBand,
                                     band_verdict, compute_band)
+from repro.obs import jaxprof
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.data.loader import EnsembleLoader
 from repro.metrics import psnr, total_mass, total_momentum
 from repro.models.surrogate import (SurrogateConfig, apply_surrogate,
@@ -202,6 +205,19 @@ def train_ensemble(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     if do_eval:
         eval_cond = jnp.asarray(eval_conditions)
         eval_tgt = jnp.asarray(eval_targets)
+    # telemetry: same compile/steady split as train_surrogate -- the first
+    # step's jit time is reported once (ensemble.compile_seconds) and kept
+    # out of the steady-state step histogram; a steady-state recompile of
+    # the shared vmapped step is flagged by the watcher
+    from repro.train import source as source_mod
+    reg = obs_metrics.get_registry()
+    watcher = jaxprof.get_watcher()
+    watcher.watch(
+        "ensemble.fused_step" if device_path else "ensemble.step",
+        source_mod._fused_ensemble_step if device_path else ensemble_train_step)
+    step_hist = reg.histogram("ensemble.step_seconds")
+    first_in_run = True
+
     traj = {k: [] for k in TRAJECTORY_METRICS}
     spe = loader.steps_per_epoch
     losses = []
@@ -210,6 +226,7 @@ def train_ensemble(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     stream = batch_stream(loader, source.fetch, train_cfg.epochs, prefetch)
     try:
         for _lstate, item in stream:
+            t0s = time.perf_counter()
             if device_path:
                 params, opt_state, loss = fused_step(params, opt_state, item)
             else:
@@ -217,16 +234,31 @@ def train_ensemble(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
                 params, opt_state, loss = ensemble_train_step(
                     params, opt_state, cond_b, tgt_b, model_cfg, opt_cfg)
             step += 1
+            if first_in_run:
+                first_in_run = False
+                jax.block_until_ready(loss)
+                compile_s = time.perf_counter() - t0s
+                reg.gauge("ensemble.compile_seconds").set(compile_s)
+                obs_trace.instant("ensemble.compile", cat="ensemble",
+                                  members=len(seeds), seconds=compile_s)
+                watcher.rebase()
+            else:
+                step_hist.observe(time.perf_counter() - t0s)
             if step % train_cfg.log_every == 0:
                 losses.append((step, np.asarray(loss)))
             if do_eval and step % spe == 0 and (step // spe) % eval_every == 0:
-                vals = _eval_ensemble(params, model_cfg, eval_cond, eval_tgt)
+                with obs_trace.span("ensemble.eval", cat="ensemble",
+                                    step=step, members=len(seeds)):
+                    vals = _eval_ensemble(params, model_cfg, eval_cond,
+                                          eval_tgt)
                 for k in TRAJECTORY_METRICS:
                     traj[k].append(np.asarray(vals[k]))
             if train_cfg.max_steps is not None and step >= train_cfg.max_steps:
                 break
     finally:
         stream.close()
+        reg.counter("ensemble.steps").add(step)
+        watcher.check()
     trajectories = {k: np.stack(v, axis=1) for k, v in traj.items() if v}
     return EnsembleResult(params=params, losses=losses,
                           trajectories=trajectories, seeds=seeds,
@@ -450,10 +482,12 @@ def certify_tolerance(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
 
     # 1) raw seed ensemble + bands
     raw_store = RawArrayStore(train_fields)
-    ens = train_ensemble(model_cfg, train_cfg, conditions, raw_store, seeds,
-                         eval_conditions=eval_conditions,
-                         eval_targets=eval_targets,
-                         loader=matched_loader(seeds))
+    with obs_trace.span("certify.seed_ensemble", cat="certify",
+                        members=len(seeds)):
+        ens = train_ensemble(model_cfg, train_cfg, conditions, raw_store,
+                             seeds, eval_conditions=eval_conditions,
+                             eval_targets=eval_targets,
+                             loader=matched_loader(seeds))
     if not ens.trajectories:
         raise ValueError("certification needs per-epoch trajectories; "
                          "train for at least one full epoch")
@@ -466,27 +500,40 @@ def certify_tolerance(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     # 2) Algorithm 1: per-sample tolerances bounded by the model's own error
     e_model = float(ens.trajectories["l1"][:, -1].mean())
     samples_cf = np.ascontiguousarray(np.transpose(train_fields, (0, 3, 1, 2)))
-    base = find_tolerance_batch(samples_cf,
-                                np.full(n_train, e_model, np.float32))
+    with obs_trace.span("certify.algorithm1", cat="certify",
+                        samples=n_train, model_l1=e_model):
+        base = find_tolerance_batch(samples_cf,
+                                    np.full(n_train, e_model, np.float32))
 
     def lossy_candidates(mults):
-        if device_resident:
-            stores = [DeviceResidentCompressedStore.from_samples(
-                samples_cf, base.tolerance * m, shard_size=shard_size)
-                for m in mults]
-        else:
-            stores = [ShardedCompressedStore(
-                samples_cf, tolerances=base.tolerance * m,
-                shard_size=shard_size) for m in mults]
-        run = train_ensemble(
-            model_cfg, dataclasses.replace(train_cfg, seed=lossy_seed),
-            conditions, stores, [lossy_seed] * len(stores),
-            eval_conditions=eval_conditions, eval_targets=eval_targets,
-            target_transform=channels_last,
-            loader=matched_loader([lossy_seed] * len(stores)))
-        return [_judge(band_art, run.trajectories, m, mult, stores[m],
-                       metrics, frac_required, dev_allowance)
-                for m, mult in enumerate(mults)]
+        with obs_trace.span("certify.build_stores", cat="certify",
+                            candidates=len(mults),
+                            backend="device" if device_resident else "host"):
+            if device_resident:
+                stores = [DeviceResidentCompressedStore.from_samples(
+                    samples_cf, base.tolerance * m, shard_size=shard_size)
+                    for m in mults]
+            else:
+                stores = [ShardedCompressedStore(
+                    samples_cf, tolerances=base.tolerance * m,
+                    shard_size=shard_size) for m in mults]
+        with obs_trace.span("certify.lossy_sweep", cat="certify",
+                            candidates=len(mults)):
+            run = train_ensemble(
+                model_cfg, dataclasses.replace(train_cfg, seed=lossy_seed),
+                conditions, stores, [lossy_seed] * len(stores),
+                eval_conditions=eval_conditions, eval_targets=eval_targets,
+                target_transform=channels_last,
+                loader=matched_loader([lossy_seed] * len(stores)))
+        verdicts = []
+        for m, mult in enumerate(mults):
+            with obs_trace.span("certify.judge", cat="certify",
+                                multiple=float(mult)) as sp:
+                v = _judge(band_art, run.trajectories, m, mult, stores[m],
+                           metrics, frac_required, dev_allowance)
+                sp.set(benign=v.benign, ratio=v.ratio)
+            verdicts.append(v)
+        return verdicts
 
     # 3+4) the sweep: every multiple trained in ONE vmapped ensemble
     t0 = time.time()

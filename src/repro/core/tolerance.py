@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compression import FixedAccuracyCodec
+from repro.obs import trace as obs_trace
 
 C_D = {1: 1.044, 2: 1.089, 3: 1.134, 4: 1.178}   # Fox & Lindstrom, Appendix A
 
@@ -213,7 +214,11 @@ def find_tolerance_batch(samples: np.ndarray | Sequence[np.ndarray],
                      else samples, jnp.float32)
     es = jnp.asarray(np.asarray(model_l1_errors, np.float32))
     assert xs.shape[0] == es.shape[0], "one model error per sample"
-    tol, l1, ratio, iters = _search_batch(xs, es, d, max_iters)
+    with obs_trace.span("tolerance.search_batch", cat="certify",
+                        samples=int(xs.shape[0])) as sp:
+        tol, l1, ratio, iters = _search_batch(xs, es, d, max_iters)
+        iters = np.asarray(iters)
+        sp.set(max_iterations=int(iters.max(initial=0)))
     return BatchToleranceResult(np.asarray(tol), np.asarray(es),
                                 np.asarray(l1), np.asarray(ratio),
-                                np.asarray(iters))
+                                iters)

@@ -34,6 +34,7 @@ import numpy as np
 from repro.compression import (CompressedField, TOTAL_PLANES,
                                decode_stacked_payloads, get_codec)
 from repro.data.store import IoStats
+from repro.obs import trace as obs_trace
 
 
 @partial(jax.jit, static_argnames=("padded_shape", "shape"))
@@ -176,11 +177,12 @@ class DeviceResidentCompressedStore:
         drop-in use by loaders/benchmarks -- training should go through the
         fused step in repro.train.source, which never leaves the device.
         """
-        t0 = time.perf_counter()
-        batch = _gather_decode(self.payload, self.emax, self.nplanes,
-                               jnp.asarray(np.asarray(idx), jnp.int32),
-                               self._padded_shape, self.shape)
-        batch.block_until_ready()
-        self.stats.decode_seconds += time.perf_counter() - t0
-        self.stats.batches += 1
-        return batch
+        with obs_trace.span("data.get_batch", cat="data",
+                            store="device_resident", batch=len(idx)):
+            t0 = time.perf_counter()
+            batch = _gather_decode(self.payload, self.emax, self.nplanes,
+                                   jnp.asarray(np.asarray(idx), jnp.int32),
+                                   self._padded_shape, self.shape)
+            batch.block_until_ready()
+            self.stats.account(decode_seconds=time.perf_counter() - t0)
+            return batch

@@ -36,6 +36,7 @@ from repro.compression import (
     compressed_nbytes_batch, decode_stacked_payloads, get_codec,
 )
 from repro.data.store import IoStats, throttle
+from repro.obs import trace as obs_trace
 
 MANIFEST_NAME = "manifest.json"
 FORMAT_TAG = "repro-shards-v1"
@@ -258,31 +259,31 @@ class ShardedCompressedStore:
         reads are contiguous), payloads padded to the in-batch max width,
         and the whole (B * nb, wmax) stack decoded at once.
         """
-        idx = np.asarray(idx)
-        t0 = time.perf_counter()
-        b = len(idx)
-        wmax = int(self.widths[idx].max())
-        payload = np.zeros((b, self.nb, wmax), np.int32)
-        emax = np.empty((b, self.nb), np.int32)
-        nbytes = 0
-        for pos in np.argsort(idx // self.shard_size, kind="stable"):
-            i = int(idx[pos])
-            words = self._shard_words(self.shard_of(i))
-            off, w = int(self._offsets[i]), int(self.widths[i])
-            rec = np.asarray(words[off:off + self.nb * (w + 1)])
-            payload[pos, :, :w] = rec[:self.nb * w].reshape(self.nb, w)
-            emax[pos] = rec[self.nb * w:]
-            nbytes += rec.nbytes
-        throttle(nbytes, t0, self.bandwidth_mbs)
-        t1 = time.perf_counter()
-        batch = decode_stacked_payloads(payload, emax, self._padded_shape,
-                                        self.shape)
-        batch.block_until_ready()
-        self.stats.bytes_read += nbytes
-        self.stats.read_seconds += t1 - t0
-        self.stats.decode_seconds += time.perf_counter() - t1
-        self.stats.batches += 1
-        return batch
+        with obs_trace.span("data.get_batch", cat="data", store="sharded",
+                            batch=len(idx)):
+            idx = np.asarray(idx)
+            t0 = time.perf_counter()
+            b = len(idx)
+            wmax = int(self.widths[idx].max())
+            payload = np.zeros((b, self.nb, wmax), np.int32)
+            emax = np.empty((b, self.nb), np.int32)
+            nbytes = 0
+            for pos in np.argsort(idx // self.shard_size, kind="stable"):
+                i = int(idx[pos])
+                words = self._shard_words(self.shard_of(i))
+                off, w = int(self._offsets[i]), int(self.widths[i])
+                rec = np.asarray(words[off:off + self.nb * (w + 1)])
+                payload[pos, :, :w] = rec[:self.nb * w].reshape(self.nb, w)
+                emax[pos] = rec[self.nb * w:]
+                nbytes += rec.nbytes
+            throttle(nbytes, t0, self.bandwidth_mbs)
+            t1 = time.perf_counter()
+            batch = decode_stacked_payloads(payload, emax, self._padded_shape,
+                                            self.shape)
+            batch.block_until_ready()
+            self.stats.account(nbytes, read_seconds=t1 - t0,
+                               decode_seconds=time.perf_counter() - t1)
+            return batch
 
     def as_device_resident(self):
         """Upload the whole store to device memory once.

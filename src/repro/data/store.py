@@ -16,7 +16,6 @@ on the container's single disk -- DESIGN.md §8 records this adaptation.
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 import time
 from typing import Optional, Protocol, Sequence, Tuple, runtime_checkable
@@ -25,6 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compression import decode_stacked_payloads, get_codec
+from repro.obs import trace as obs_trace
+# THE IoStats implementation (single definition, registry-backed, with
+# merge/reset/snapshot) lives in the observability layer; this re-export is
+# the stores' historical import location.
+from repro.obs.metrics import IoStats
 
 
 @runtime_checkable
@@ -37,7 +41,7 @@ class ArrayStore(Protocol):
     benchmarks and the train loop are store-agnostic: anything with indexed
     batch access, IO accounting, and a logical footprint.
     """
-    stats: "IoStats"
+    stats: IoStats
     shape: Tuple[int, ...]
     num_samples: int
     sample_nbytes: int
@@ -46,18 +50,6 @@ class ArrayStore(Protocol):
 
     @property
     def stored_bytes(self) -> int: ...
-
-
-@dataclasses.dataclass
-class IoStats:
-    bytes_read: int = 0
-    read_seconds: float = 0.0
-    decode_seconds: float = 0.0
-    batches: int = 0
-
-    def throughput_mbs(self) -> float:
-        total = self.read_seconds + self.decode_seconds
-        return (self.bytes_read / 1e6) / max(total, 1e-9)
 
 
 def throttle(nbytes: int, started: float, bandwidth_mbs: Optional[float]):
@@ -113,18 +105,20 @@ class RawArrayStore:
         return self.sample_nbytes * self.num_samples
 
     def get_batch(self, idx: np.ndarray) -> jnp.ndarray:
-        t0 = time.perf_counter()
-        if self._mem is not None:
-            batch = self._mem[np.asarray(idx)]
-        else:
-            batch = np.stack([np.load(os.path.join(self.root, f"sample_{i:06d}.npy"))
-                              for i in np.asarray(idx)])
-        nbytes = batch.nbytes
-        throttle(nbytes, t0, self.bandwidth_mbs)
-        self.stats.bytes_read += nbytes
-        self.stats.read_seconds += time.perf_counter() - t0
-        self.stats.batches += 1
-        return jnp.asarray(batch)
+        with obs_trace.span("data.get_batch", cat="data", store="raw",
+                            batch=len(idx)):
+            t0 = time.perf_counter()
+            if self._mem is not None:
+                batch = self._mem[np.asarray(idx)]
+            else:
+                batch = np.stack([np.load(os.path.join(self.root,
+                                                       f"sample_{i:06d}.npy"))
+                                  for i in np.asarray(idx)])
+            nbytes = batch.nbytes
+            throttle(nbytes, t0, self.bandwidth_mbs)
+            self.stats.account(nbytes,
+                               read_seconds=time.perf_counter() - t0)
+            return jnp.asarray(batch)
 
 
 class CompressedArrayStore:
@@ -191,27 +185,29 @@ class CompressedArrayStore:
         return self.sample_nbytes * self.num_samples / max(self.logical_bytes, 1)
 
     def get_batch(self, idx: np.ndarray) -> jnp.ndarray:
-        idx = np.asarray(idx)
-        t0 = time.perf_counter()
-        payloads, emaxs, nbytes = [], [], 0
-        for i in idx:
-            if self.root is None:
-                p, e = self._payload[i], self._emax[i]
-            else:
-                z = np.load(os.path.join(self.root, f"sample_{i:06d}.npz"))
-                p, e = z["payload"], z["emax"]
-            nbytes += p.nbytes + e.nbytes
-            payloads.append(p)
-            emaxs.append(e)
-        wmax = max(p.shape[1] for p in payloads)
-        payloads = [np.pad(p, ((0, 0), (0, wmax - p.shape[1]))) for p in payloads]
-        throttle(nbytes, t0, self.bandwidth_mbs)
-        t1 = time.perf_counter()
-        batch = decode_stacked_payloads(np.stack(payloads), np.stack(emaxs),
-                                        self._padded_shape, self.shape)
-        batch.block_until_ready()
-        self.stats.bytes_read += nbytes
-        self.stats.read_seconds += t1 - t0
-        self.stats.decode_seconds += time.perf_counter() - t1
-        self.stats.batches += 1
-        return batch
+        with obs_trace.span("data.get_batch", cat="data", store="zfp",
+                            batch=len(idx)):
+            idx = np.asarray(idx)
+            t0 = time.perf_counter()
+            payloads, emaxs, nbytes = [], [], 0
+            for i in idx:
+                if self.root is None:
+                    p, e = self._payload[i], self._emax[i]
+                else:
+                    z = np.load(os.path.join(self.root, f"sample_{i:06d}.npz"))
+                    p, e = z["payload"], z["emax"]
+                nbytes += p.nbytes + e.nbytes
+                payloads.append(p)
+                emaxs.append(e)
+            wmax = max(p.shape[1] for p in payloads)
+            payloads = [np.pad(p, ((0, 0), (0, wmax - p.shape[1])))
+                        for p in payloads]
+            throttle(nbytes, t0, self.bandwidth_mbs)
+            t1 = time.perf_counter()
+            batch = decode_stacked_payloads(np.stack(payloads),
+                                            np.stack(emaxs),
+                                            self._padded_shape, self.shape)
+            batch.block_until_ready()
+            self.stats.account(nbytes, read_seconds=t1 - t0,
+                               decode_seconds=time.perf_counter() - t1)
+            return batch

@@ -45,6 +45,7 @@ from repro.data.shards import (MANIFEST_NAME, ShardedCompressedStore,
                                build_manifest)
 from repro.datagen.plan import ProductionPlan, ScenarioPlan, sim_provenance
 from repro.datagen.writer import ShardWriter
+from repro.obs import trace as obs_trace
 from repro.distributed.sharding import owned_shards
 from repro.sim.solver import run_simulation
 
@@ -239,12 +240,21 @@ def _produce_scenario(plan: ProductionPlan, sc: ScenarioPlan, sdir: str,
     codec = codec_from_plan(plan.codec)
     try:
         for i in sims:
-            fields = run_simulation(params[i], ny=sc.spec.ny, nx=sc.spec.nx,
-                                    nsteps=sc.spec.nsteps, nsnaps=nsnaps)
+            with obs_trace.span("datagen.simulate", cat="datagen",
+                                scenario=sc.name, member=i):
+                fields = run_simulation(params[i], ny=sc.spec.ny,
+                                        nx=sc.spec.nx, nsteps=sc.spec.nsteps,
+                                        nsnaps=nsnaps)
             samples = jnp.moveaxis(fields, -1, 1)        # (T, C, H, W)
             for lo in range(0, nsnaps, size):
                 chunk = samples[lo:lo + size]
-                writer.put(i * nsnaps + lo, codec.encode_batch(chunk))
+                # the encode dispatch is async on device; the worker's
+                # pack_sample_records blocks on the result, so this span is
+                # dispatch cost and datagen.transfer is the true wait
+                with obs_trace.span("datagen.encode", cat="datagen",
+                                    scenario=sc.name, samples=len(chunk)):
+                    cf = codec.encode_batch(chunk)
+                writer.put(i * nsnaps + lo, cf)
         writer.close()
     except BaseException:
         # a preempted/failed run leaves committed shards + progress behind

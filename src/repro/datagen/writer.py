@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.data.store import throttle
 from repro.data.shards import _shard_filename, pack_sample_records
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -158,8 +159,12 @@ class ShardWriter:
                      min((k + 1) * self.shard_size, self.num_samples))
 
     def _ingest(self, start: int, cf) -> None:
+        # runs on the worker thread when overlap=True, so these spans land on
+        # their own Perfetto track and the sim/encode <-> transfer/IO overlap
+        # is visible directly in the timeline
         t0 = time.perf_counter()
-        records, widths, logical = pack_sample_records(cf)
+        with obs_trace.span("datagen.transfer", cat="datagen", start=start):
+            records, widths, logical = pack_sample_records(cf)
         self.stats.transfer_seconds += time.perf_counter() - t0
         self._block_count = int(np.asarray(cf.emax).shape[-1])
         self._padded_shape = tuple(cf.padded_shape)
@@ -177,16 +182,18 @@ class ShardWriter:
 
     def _commit(self, k: int, rng: range) -> None:
         t0 = time.perf_counter()
-        recs = [self._pending.pop(i) for i in rng]
-        words = np.concatenate([r[0] for r in recs]).astype("<i4")
-        path = os.path.join(self.root, _shard_filename(k))
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            words.tofile(f)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)                      # atomic shard commit
-        throttle(words.nbytes, t0, self.bandwidth_mbs)
+        with obs_trace.span("datagen.write", cat="datagen", shard=k) as sp:
+            recs = [self._pending.pop(i) for i in rng]
+            words = np.concatenate([r[0] for r in recs]).astype("<i4")
+            path = os.path.join(self.root, _shard_filename(k))
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                words.tofile(f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)                  # atomic shard commit
+            throttle(words.nbytes, t0, self.bandwidth_mbs)
+            sp.set(bytes=int(words.nbytes))
         self.targets.discard(k)
         self.stats.bytes_written += words.nbytes
         self.stats.write_seconds += time.perf_counter() - t0

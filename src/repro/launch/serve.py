@@ -28,6 +28,7 @@ import jax
 
 from repro.configs import reduced_config
 from repro.models import lm
+from repro.obs import trace as obs_trace
 from repro.serving import ServeEngine, SurrogateServeEngine
 from repro.serving.loadgen import (latency_percentiles, lm_workload,
                                    surrogate_workload)
@@ -96,8 +97,16 @@ def main() -> None:
                     help="run the chunked max(...) baseline instead of "
                          "continuous batching")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable telemetry: write <run>.trace.json "
+                         "(Perfetto-loadable) + <run>.events.jsonl here")
     args = ap.parse_args()
+    if args.trace_dir:
+        obs_trace.configure(args.trace_dir, run=f"serve_{args.mode}")
     (serve_lm if args.mode == "lm" else serve_surrogate)(args)
+    if args.trace_dir:
+        paths = obs_trace.shutdown()
+        print(f"trace: {paths['trace']}\nevents: {paths['events']}")
 
 
 if __name__ == "__main__":

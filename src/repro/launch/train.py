@@ -27,6 +27,12 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable telemetry: write <run>.trace.json "
+                         "(Perfetto-loadable) + <run>.events.jsonl here")
+    ap.add_argument("--jax-profile", action="store_true",
+                    help="also capture a jax.profiler trace under "
+                         "TRACE_DIR/jaxprof (requires --trace-dir)")
     args = ap.parse_args()
 
     if args.dry_run:
@@ -38,13 +44,22 @@ def main() -> None:
                "--mesh", "multi" if args.multi_pod else "single"]
         raise SystemExit(subprocess.call(cmd))
 
+    import contextlib
+    import os
+
     import numpy as np
     import jax
     import jax.numpy as jnp
     from repro.configs import reduced_config
     from repro.models import lm
+    from repro.obs import jaxprof
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
     from repro.train import checkpoint as ckpt
     from repro.train.optimizer import AdamConfig, adam_init, adam_update
+
+    if args.trace_dir:
+        obs_trace.configure(args.trace_dir, run=f"train_{args.arch}")
 
     cfg = reduced_config(args.arch)
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
@@ -66,24 +81,61 @@ def main() -> None:
         params, opt = adam_update(grads, opt, params, opt_cfg)
         return params, opt, loss
 
+    reg = obs_metrics.get_registry()
+    watcher = jaxprof.get_watcher()
+    watcher.watch("launch.train_step", step)
+    tracer = obs_trace.get_tracer()
+    profile_ctx = (jaxprof.profiler_trace(os.path.join(args.trace_dir,
+                                                       "jaxprof"))
+                   if args.jax_profile and args.trace_dir
+                   else contextlib.nullcontext())
+
     rng = np.random.default_rng(start)
-    t0 = time.time()
-    for i in range(start, start + args.steps):
-        toks = jnp.asarray(rng.integers(0, cfg.vocab_size,
-                                        (args.batch, args.seq)), jnp.int32)
-        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
-        if cfg.frontend == "vision":
-            batch["frontend_embeds"] = jnp.zeros(
-                (args.batch, cfg.frontend_seq, cfg.frontend_dim))
-        if cfg.encoder_layers:
-            batch["encoder_embeds"] = jnp.zeros(
-                (args.batch, args.seq, cfg.frontend_dim))
-        params, opt, loss = step(params, opt, batch)
-        print(f"step {i:4d} loss {float(loss):.4f}")
-        if args.ckpt_dir and (i + 1) % 5 == 0:
-            ckpt.save_checkpoint(args.ckpt_dir, i + 1,
-                                 {"params": params, "opt": opt})
-    print(f"{args.steps} steps in {time.time() - t0:.1f}s")
+    compile_s = 0.0
+    steady_s = 0.0
+    with profile_ctx:
+        for i in range(start, start + args.steps):
+            toks = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                            (args.batch, args.seq)), jnp.int32)
+            batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+            if cfg.frontend == "vision":
+                batch["frontend_embeds"] = jnp.zeros(
+                    (args.batch, cfg.frontend_seq, cfg.frontend_dim))
+            if cfg.encoder_layers:
+                batch["encoder_embeds"] = jnp.zeros(
+                    (args.batch, args.seq, cfg.frontend_dim))
+            t0s = time.perf_counter()
+            params, opt, loss = step(params, opt, batch)
+            loss = jax.block_until_ready(loss)
+            dt = time.perf_counter() - t0s
+            if i == start:
+                # the first step pays jit compilation: report it once and
+                # keep it out of the steady-state rate
+                compile_s = dt
+                reg.gauge("train.compile_seconds").set(dt)
+                obs_trace.instant("train.compile", cat="train", seconds=dt)
+                watcher.rebase()
+            else:
+                steady_s += dt
+                reg.histogram("train.step_seconds").observe(dt)
+            if tracer is not None:
+                tracer.complete("train.step", tracer.rel(t0s), dt,
+                                cat="train", step=i)
+            print(f"step {i:4d} loss {float(loss):.4f}")
+            if args.ckpt_dir and (i + 1) % 5 == 0:
+                ckpt.save_checkpoint(args.ckpt_dir, i + 1,
+                                     {"params": params, "opt": opt})
+    recompiles = watcher.check()
+    steady_steps = max(args.steps - 1, 0)
+    rate = steady_steps / steady_s if steady_s > 0 else float("nan")
+    print(f"{args.steps} steps: compile {compile_s:.2f}s + steady "
+          f"{steady_s:.2f}s ({rate:.1f} steps/s steady-state)")
+    if recompiles:
+        print(f"WARNING: {len(recompiles)} unexpected recompile(s): "
+              + ", ".join(e.name for e in recompiles))
+    if args.trace_dir:
+        paths = obs_trace.shutdown()
+        print(f"trace: {paths['trace']}\nevents: {paths['events']}")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import lm
+from repro.obs import jaxprof
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.scheduler import SlotScheduler
 
 
@@ -92,6 +95,7 @@ class ServeEngine:
         self.stats = {"tokens": 0, "prefill_tokens": 0, "seconds": 0.0,
                       "prefill_seconds": 0.0, "decode_seconds": 0.0,
                       "decode_steps": 0, "delivered_slot_steps": 0}
+        self._t_run_start: Optional[float] = None   # perf stamp of run start
 
     # -- shared helpers -----------------------------------------------------
 
@@ -114,6 +118,24 @@ class ServeEngine:
         req.latency = now - req.arrival
         self.stats["tokens"] += int(req.output.shape[0])
         done.append(req)
+        reg = obs_metrics.get_registry()
+        reg.counter("serve.requests").add(1)
+        reg.histogram("serve.request_latency_seconds").observe(req.latency)
+        seated = getattr(req, "_seated", None)
+        if seated is not None:
+            reg.histogram("serve.queue_wait_seconds").observe(
+                seated - req.arrival)
+        tracer = obs_trace.get_tracer()
+        if tracer is not None and self._t_run_start is not None:
+            # request lifetime span on the tracer timeline: arrival (queued)
+            # through completion; queue wait separates scheduling delay from
+            # prefill+decode service time
+            tracer.complete(
+                "serve.request", tracer.rel(self._t_run_start + req.arrival),
+                req.latency, cat="serve", tokens=int(req.output.shape[0]),
+                prompt=int(len(req.prompt)),
+                queue_wait_s=None if seated is None
+                else round(seated - req.arrival, 6))
 
     # -- continuous batching ------------------------------------------------
 
@@ -135,6 +157,17 @@ class ServeEngine:
         done: List[Request] = []
         t_start = time.perf_counter()
         clock = lambda: time.perf_counter() - t_start
+        self._t_run_start = t_start
+        reg = obs_metrics.get_registry()
+        occ_hist = reg.histogram("serve.slot_occupancy")
+        tracer = obs_trace.get_tracer()
+        # the decode step runs at fixed (batch, 1) shape: after the first
+        # step's expected compile (absorbed by rebase below) any cache growth
+        # is a genuine recompile bug worth flagging.  Prefill legitimately
+        # compiles per prompt length, so it is NOT watched.
+        watcher = jaxprof.get_watcher()
+        watcher.watch("serve.decode_step", _decode_step)
+        first_decode = True
 
         while not sched.done:
             now = clock()
@@ -148,6 +181,7 @@ class ServeEngine:
                     break
                 recycled = False
                 for slot, req in adm:
+                    req._seated = now
                     if req.max_new_tokens <= 0:
                         self._finish(req, [], clock(), done)
                         sched.complete(slot)
@@ -178,7 +212,12 @@ class ServeEngine:
                         pos[slot], cur[slot] = plen, first[row]
                         remaining[slot] = req.max_new_tokens - 1
                         self.stats["prefill_tokens"] += plen
-                self._account(prefill_s=time.perf_counter() - t0)
+                prefill_s = time.perf_counter() - t0
+                self._account(prefill_s=prefill_s)
+                if tracer is not None:
+                    tracer.complete("serve.prefill", tracer.rel(t0), prefill_s,
+                                    cat="serve", requests=len(seated),
+                                    groups=len(by_len))
                 for slot, req in seated:        # max_new_tokens == 1
                     if remaining[slot] == 0:
                         self._finish(req, outs[slot], clock(), done)
@@ -196,9 +235,18 @@ class ServeEngine:
             logits, cache = _decode_step(self.params, self.cfg, cache,
                                          jnp.asarray(cur), jnp.asarray(pos))
             nxt = np.array(jnp.argmax(logits, -1), np.int32)   # writable copy
-            self._account(decode_s=time.perf_counter() - t0)
+            decode_s = time.perf_counter() - t0
+            self._account(decode_s=decode_s)
             self.stats["decode_steps"] += 1
             self.stats["delivered_slot_steps"] += len(active)
+            occ_hist.observe(len(active) / b)
+            if first_decode:
+                first_decode = False
+                watcher.rebase()        # first-step compile is expected
+            if tracer is not None:
+                tracer.complete("serve.decode_step", tracer.rel(t0), decode_s,
+                                cat="serve", active=len(active))
+                tracer.counter("serve.slots", active=len(active), total=b)
             now = clock()
             cur = nxt
             for slot, req in active:
@@ -208,6 +256,7 @@ class ServeEngine:
                 if remaining[slot] == 0:
                     self._finish(req, outs[slot], now, done)
                     sched.complete(slot)
+        watcher.check()         # flags mid-run decode recompiles
         return done
 
     # -- lockstep baseline --------------------------------------------------
@@ -223,6 +272,7 @@ class ServeEngine:
         self._validate(requests)
         done: List[Request] = []
         t_start = time.perf_counter()
+        self._t_run_start = t_start
         for i in range(0, len(requests), self.batch):
             chunk = requests[i:i + self.batch]
             nreal = len(chunk)

@@ -34,6 +34,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.surrogate import SurrogateConfig, apply_surrogate
+from repro.obs import jaxprof
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.scheduler import SlotScheduler
 
 
@@ -83,6 +86,7 @@ class SurrogateServeEngine:
         self.sigmas = float(sigmas)
         self.stats = {"queries": 0, "field_evals": 0, "steps": 0,
                       "seconds": 0.0}
+        self._t_run_start: Optional[float] = None   # perf stamp of run start
 
     # -- internals ----------------------------------------------------------
 
@@ -101,6 +105,19 @@ class SurrogateServeEngine:
         q.latency = now - q.arrival
         self.stats["queries"] += 1
         done.append(q)
+        reg = obs_metrics.get_registry()
+        reg.counter("surrogate_serve.queries").add(1)
+        reg.histogram("surrogate_serve.query_latency_seconds").observe(
+            q.latency)
+        tracer = obs_trace.get_tracer()
+        if tracer is not None and self._t_run_start is not None:
+            seated = getattr(q, "_seated", None)
+            tracer.complete(
+                "surrogate_serve.query",
+                tracer.rel(self._t_run_start + q.arrival), q.latency,
+                cat="serve", steps=q.steps,
+                queue_wait_s=None if seated is None
+                else round(seated - q.arrival, 6))
 
     def _cond_row(self, q: SurrogateQuery, k: int) -> np.ndarray:
         return np.concatenate([np.asarray(q.params_vec, np.float32),
@@ -122,6 +139,15 @@ class SurrogateServeEngine:
         done: List[SurrogateQuery] = []
         t_start = time.perf_counter()
         clock = lambda: time.perf_counter() - t_start
+        self._t_run_start = t_start
+        reg = obs_metrics.get_registry()
+        occ_hist = reg.histogram("surrogate_serve.slot_occupancy")
+        tracer = obs_trace.get_tracer()
+        # fleet step shape is fixed (B, cond_dim): growth after the first
+        # step's compile (rebased away below) is a genuine recompile
+        watcher = jaxprof.get_watcher()
+        watcher.watch("surrogate_serve.fleet_step", _fleet_step)
+        first_step = True
 
         while not sched.done:
             now = clock()
@@ -131,6 +157,7 @@ class SurrogateServeEngine:
                     break
                 recycled = False
                 for slot, q in adm:
+                    q._seated = now
                     if q.steps == 0:         # empty rollout: return as-is
                         self._finish(q, [], [], clock(), done)
                         sched.complete(slot)
@@ -151,9 +178,20 @@ class SurrogateServeEngine:
 
             t0 = time.perf_counter()
             mean_b, width_b = self._step(cond)
-            self.stats["seconds"] += time.perf_counter() - t0
+            step_s = time.perf_counter() - t0
+            self.stats["seconds"] += step_s
             self.stats["steps"] += 1
             self.stats["field_evals"] += len(active)
+            occ_hist.observe(len(active) / b)
+            if first_step:
+                first_step = False
+                watcher.rebase()        # first-step compile is expected
+            if tracer is not None:
+                tracer.complete("surrogate_serve.fleet_step", tracer.rel(t0),
+                                step_s, cat="serve", active=len(active),
+                                members=self.num_members)
+                tracer.counter("surrogate_serve.slots", active=len(active),
+                               total=b)
             now = clock()
             for slot, q in active:
                 means[slot].append(mean_b[slot])
@@ -165,6 +203,7 @@ class SurrogateServeEngine:
                 else:
                     step_idx[slot] = k
                     cond[slot] = self._cond_row(q, k)
+        watcher.check()         # flags mid-run fleet-step recompiles
         return done
 
     # -- lockstep baseline --------------------------------------------------
@@ -175,6 +214,7 @@ class SurrogateServeEngine:
         re-evaluates the last timestep and the result is dropped)."""
         done: List[SurrogateQuery] = []
         t_start = time.perf_counter()
+        self._t_run_start = t_start
         for i in range(0, len(queries), self.batch):
             chunk = queries[i:i + self.batch]
             steps = max((q.steps for q in chunk), default=0)

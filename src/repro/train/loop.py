@@ -30,6 +30,7 @@ yardstick.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Callable, Optional, Union
 
@@ -37,6 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import jaxprof
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 # Re-exported building blocks (historical import location; the
 # implementations live in repro.train.source alongside the BatchSource seam).
 from repro.train.source import (batch_stream, make_batch_source,
@@ -171,13 +175,37 @@ def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
     track_prev = bool(train_cfg.ckpt_dir) and _needs_certify(train_cfg)
     params_prev = None
 
+    # -- telemetry: compile vs steady-state split, recompile watch ----------
+    # The first step of a run pays jit compilation; folding it into the
+    # per-step rate skews every log_every-window throughput number (the bug
+    # this split fixes).  ``train.compile_seconds`` is reported once; the
+    # steady-state counters/histogram and the per-window events exclude it.
+    from repro.train import source as source_mod
+    reg = obs_metrics.get_registry()
+    watcher = jaxprof.get_watcher()
+    watcher.watch("train.fused_step" if device_path else "train.step",
+                  source_mod._fused_step if device_path else _train_step)
+    step_hist = reg.histogram("train.step_seconds")
+    tracer = obs_trace.get_tracer()
+    first_in_run = True
+    steady_s = 0.0
+    win_steps, win_s = 0, 0.0
+    start_step = step
+
     stream = batch_stream(loader, source.fetch, train_cfg.epochs, prefetch)
     losses = []
     saved_step = -1
     try:
+        t_iter = time.perf_counter()
         for lstate, item in stream:
+            # wait-for-batch time: ~0 when the prefetch worker keeps up, the
+            # host gather/decode stall otherwise (decode split per store is
+            # in its IoStats)
+            reg.counter("train.fetch_wait_seconds").add(
+                time.perf_counter() - t_iter)
             if track_prev:
                 params_prev = params
+            t0s = time.perf_counter()
             if device_path:
                 params, opt_state, loss = fused_step(params, opt_state, item)
             else:
@@ -185,20 +213,49 @@ def train_surrogate(model_cfg: SurrogateConfig, train_cfg: TrainConfig,
                 params, opt_state, loss = _train_step(
                     params, opt_state, cond, target, model_cfg, opt_cfg)
             step += 1
+            if first_in_run:
+                first_in_run = False
+                jax.block_until_ready(loss)
+                compile_s = time.perf_counter() - t0s
+                reg.gauge("train.compile_seconds").set(compile_s)
+                obs_trace.instant("train.compile", cat="train", step=step,
+                                  seconds=compile_s)
+                watcher.rebase()        # first-step compiles are expected
+                dur = compile_s
+            else:
+                dur = time.perf_counter() - t0s
+                steady_s += dur
+                step_hist.observe(dur)
+                win_steps += 1
+                win_s += dur
+            if tracer is not None:
+                tracer.complete("train.step", tracer.rel(t0s), dur,
+                                cat="train", step=step)
             last_state = lstate
             if step % train_cfg.log_every == 0:
                 losses.append((step, float(loss)))
+                if win_steps:           # steady-state only: compile excluded
+                    obs_trace.instant(
+                        "train.window", cat="train", step=step,
+                        steps_per_s=win_steps / max(win_s, 1e-9))
+                win_steps, win_s = 0, 0.0
             if hooks:
                 for h in hooks:
                     h(step, params, float(loss))
             if (train_cfg.ckpt_dir and step % train_cfg.ckpt_every_steps == 0):
-                _save(train_cfg, step, params, opt_state, last_state,
-                      params_prev)
+                with obs_trace.span("train.checkpoint", cat="train",
+                                    step=step):
+                    _save(train_cfg, step, params, opt_state, last_state,
+                          params_prev)
                 saved_step = step
             if train_cfg.max_steps is not None and step >= train_cfg.max_steps:
                 return params, losses   # preempted: no final save
+            t_iter = time.perf_counter()
     finally:
         stream.close()
+        reg.counter("train.steps").add(step - start_step)
+        reg.counter("train.steady_seconds").add(steady_s)
+        watcher.check()     # flags (event + counter) steady-state recompiles
     if train_cfg.ckpt_dir and step != saved_step:
         _save(train_cfg, step, params, opt_state, last_state, params_prev)
     return params, losses

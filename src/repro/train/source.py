@@ -32,6 +32,8 @@ import numpy as np
 from repro.data.device_store import DeviceResidentCompressedStore
 from repro.data.loader import PrefetchLoader, ShardAwareLoader, ShardedLoader
 from repro.models.surrogate import SurrogateConfig, l1_loss
+from repro.obs import trace as obs_trace
+from repro.obs.jaxprof import named_scope
 from repro.train.optimizer import AdamConfig, adam_update
 
 
@@ -81,8 +83,12 @@ def batch_stream(loader, fetch: Callable, epochs: Optional[int],
             yield dict(loader.state()), idx
 
     def _fetch(item):
+        # spans land on whichever thread runs the fetch -- the PrefetchLoader
+        # worker when prefetch > 0 -- so host read/decode shows up on its own
+        # Perfetto track, overlapping the main thread's train.step spans
         lstate, idx = item
-        return lstate, fetch(idx)
+        with obs_trace.span("train.fetch", cat="train"):
+            return lstate, fetch(idx)
 
     if prefetch > 0:
         pl = PrefetchLoader(_snapshots(), _fetch, depth=prefetch)
@@ -151,11 +157,12 @@ def _gather_decode_transform(idx, payload, emax, nplanes, conditions,
                              padded_shape, shape, transform):
     """Traceable member gather + decode + layout transform."""
     from repro.compression import decode_stacked_payloads
-    tgt = decode_stacked_payloads(payload[idx], emax[idx], padded_shape,
-                                  shape, nplanes=nplanes[idx])
-    if transform is not None:
-        tgt = transform(tgt)
-    return conditions[idx], tgt
+    with named_scope("gather_decode"):      # names the HLO region for XProf
+        tgt = decode_stacked_payloads(payload[idx], emax[idx], padded_shape,
+                                      shape, nplanes=nplanes[idx])
+        if transform is not None:
+            tgt = transform(tgt)
+        return conditions[idx], tgt
 
 
 # The fused steps are MODULE-LEVEL jitted functions keyed on the static
@@ -171,8 +178,9 @@ def _fused_step(params, opt_state, idx, payload, emax, nplanes, conditions,
     cond, target = _gather_decode_transform(idx, payload, emax, nplanes,
                                             conditions, padded_shape, shape,
                                             transform)
-    loss, grads = jax.value_and_grad(l1_loss)(params, cfg, cond, target)
-    params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
+    with named_scope("train_update"):
+        loss, grads = jax.value_and_grad(l1_loss)(params, cfg, cond, target)
+        params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
     return params, opt_state, loss
 
 

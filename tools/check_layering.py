@@ -6,9 +6,13 @@ Two rules, enforced over every module in ``src/repro`` by AST inspection
 
 1. **Layer order** -- module-level imports must point strictly *downward*:
 
-       configs < compression < kernels
-               < {sim, metrics, distributed} < models
-               < data < datagen < core < train < serving < launch
+       obs < configs < compression < kernels
+           < {sim, metrics, distributed} < models
+           < data < datagen < core < train < serving < launch
+
+   ``obs`` (telemetry: span tracer, metrics registry, JAX profiling hooks)
+   is the ladder's bottom rung: every layer may import it, and it imports
+   nothing from ``repro`` at all.
 
    Function-local (lazy) imports are the sanctioned escape hatch for the
    few documented back-edges -- compression -> kernels (backend dispatch),
@@ -39,17 +43,18 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src", "repro")
 
 LAYER_RANK = {
-    "configs": 0,
-    "compression": 1,
-    "kernels": 2,
-    "sim": 3, "metrics": 3, "distributed": 3,
-    "models": 4,                 # the surrogate embeds sim constants
-    "data": 5,
-    "datagen": 6,
-    "core": 7,
-    "train": 8,
-    "serving": 9,
-    "launch": 10,
+    "obs": 0,                    # telemetry: zero-dep, importable anywhere
+    "configs": 1,
+    "compression": 2,
+    "kernels": 3,
+    "sim": 4, "metrics": 4, "distributed": 4,
+    "models": 5,                 # the surrogate embeds sim constants
+    "data": 6,
+    "datagen": 7,
+    "core": 8,
+    "train": 9,
+    "serving": 10,
+    "launch": 11,
 }
 
 # the seam's internals: only compression/ and kernels/ may touch them

@@ -1,0 +1,183 @@
+#!/usr/bin/env python
+"""Summarize an obs trace into a per-stage time-attribution table.
+
+Input is what the tracer exports (``repro.obs.trace.Tracer.write``): a
+``<run>.events.jsonl`` structured-event stream (preferred) or a
+``<run>.trace.json`` Chrome trace, or a directory holding either.  For each
+run the report groups spans by name and prints
+
+    name  count  total_s  self_s  mean_ms  %wall
+
+where *self* excludes time spent in nested child spans (per thread, by
+depth/containment) and *%wall* is total against the run's observed span
+extent -- the quick answer to "where did this run's time actually go".
+Instants (recompiles, compile markers, window rates) and counter series are
+summarized below the table.
+
+Usage:
+  python tools/trace_report.py out/trace                 # whole directory
+  python tools/trace_report.py out/trace/run.events.jsonl
+  python tools/trace_report.py out/trace --json          # machine-readable
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from collections import defaultdict
+from typing import List, Optional
+
+
+def load_events(path: str) -> List[dict]:
+    """Normalized events from a .events.jsonl or .trace.json file.
+
+    Normalized record: type (span|instant|counter), name, cat, ts_s, dur_s,
+    thread, depth (may be None for Chrome input; recomputed), attrs.
+    """
+    if path.endswith(".jsonl"):
+        out = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    out.append(json.loads(line))
+        return out
+    with open(path) as f:
+        doc = json.load(f)
+    ph_type = {"X": "span", "i": "instant", "C": "counter"}
+    out = []
+    for e in doc.get("traceEvents", []):
+        if e.get("ph") not in ph_type:
+            continue
+        out.append({"type": ph_type[e["ph"]], "name": e["name"],
+                    "cat": e.get("cat", ""), "ts_s": e["ts"] / 1e6,
+                    "dur_s": e.get("dur", 0.0) / 1e6,
+                    "thread": e.get("tid", 0), "depth": None,
+                    "attrs": e.get("args", {})})
+    return out
+
+
+def _assign_depths(spans: List[dict]) -> None:
+    """Recompute nesting depth per thread by interval containment (for
+    Chrome-trace input, which does not carry the recorded depth)."""
+    by_thread = defaultdict(list)
+    for s in spans:
+        by_thread[s["thread"]].append(s)
+    for group in by_thread.values():
+        group.sort(key=lambda s: (s["ts_s"], -s["dur_s"]))
+        stack: List[dict] = []
+        for s in group:
+            while stack and s["ts_s"] >= stack[-1]["ts_s"] + stack[-1]["dur_s"] - 1e-12:
+                stack.pop()
+            s["depth"] = len(stack)
+            stack.append(s)
+
+
+def _self_times(spans: List[dict]) -> None:
+    """self_s = dur_s minus the durations of directly nested child spans
+    (same thread, depth + 1, inside the parent's interval)."""
+    by_thread = defaultdict(list)
+    for s in spans:
+        s["self_s"] = s["dur_s"]
+        by_thread[s["thread"]].append(s)
+    for group in by_thread.values():
+        group.sort(key=lambda s: (s["ts_s"], -s["dur_s"]))
+        stack: List[dict] = []
+        for s in group:
+            while stack and not (
+                    s["depth"] > stack[-1]["depth"]
+                    and s["ts_s"] < stack[-1]["ts_s"] + stack[-1]["dur_s"] + 1e-12):
+                stack.pop()
+            if stack and s["depth"] == stack[-1]["depth"] + 1:
+                stack[-1]["self_s"] -= s["dur_s"]
+            stack.append(s)
+
+
+def summarize(events: List[dict]) -> dict:
+    spans = [e for e in events if e["type"] == "span"]
+    if spans and spans[0].get("depth") is None:
+        _assign_depths(spans)
+    _self_times(spans)
+
+    wall = 0.0
+    if spans:
+        t_lo = min(s["ts_s"] for s in spans)
+        t_hi = max(s["ts_s"] + s["dur_s"] for s in spans)
+        wall = max(t_hi - t_lo, 1e-12)
+
+    stages: dict = {}
+    for s in spans:
+        st = stages.setdefault(s["name"], {
+            "cat": s["cat"], "count": 0, "total_s": 0.0, "self_s": 0.0})
+        st["count"] += 1
+        st["total_s"] += s["dur_s"]
+        st["self_s"] += max(s["self_s"], 0.0)
+    for st in stages.values():
+        st["mean_ms"] = st["total_s"] / st["count"] * 1e3
+        st["pct_wall"] = st["total_s"] / wall * 100.0 if wall else 0.0
+
+    instants: dict = {}
+    for e in events:
+        if e["type"] == "instant":
+            rec = instants.setdefault(e["name"], {"count": 0, "last": None})
+            rec["count"] += 1
+            rec["last"] = e["attrs"]
+    counters = sorted({e["name"] for e in events if e["type"] == "counter"})
+    return {"wall_s": wall, "spans": len(spans), "stages": stages,
+            "instants": instants, "counters": counters}
+
+
+def print_report(path: str, rep: dict) -> None:
+    print(f"== {path} ==")
+    print(f"   {rep['spans']} spans over {rep['wall_s']:.3f}s")
+    if rep["stages"]:
+        header = (f"   {'name':<28} {'count':>6} {'total_s':>9} "
+                  f"{'self_s':>9} {'mean_ms':>9} {'%wall':>7}")
+        print(header)
+        for name, st in sorted(rep["stages"].items(),
+                               key=lambda kv: -kv[1]["total_s"]):
+            print(f"   {name:<28} {st['count']:>6} {st['total_s']:>9.3f} "
+                  f"{st['self_s']:>9.3f} {st['mean_ms']:>9.2f} "
+                  f"{st['pct_wall']:>6.1f}%")
+    for name, rec in sorted(rep["instants"].items()):
+        mark = "  ** " if name == "recompile" else "   "
+        print(f"{mark}instant {name}: x{rec['count']}  last={rec['last']}")
+    if rep["counters"]:
+        print(f"   counter series: {', '.join(rep['counters'])}")
+
+
+def find_inputs(path: str) -> List[str]:
+    if os.path.isdir(path):
+        found = sorted(glob.glob(os.path.join(path, "*.events.jsonl")))
+        if not found:       # fall back to Chrome traces only
+            found = sorted(glob.glob(os.path.join(path, "*.trace.json")))
+        return found
+    return [path]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="trace directory, .events.jsonl, "
+                                 "or .trace.json")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as JSON instead of a table")
+    args = ap.parse_args(argv)
+
+    inputs = find_inputs(args.path)
+    if not inputs:
+        print(f"no trace files under {args.path}", file=sys.stderr)
+        return 1
+    reports = {p: summarize(load_events(p)) for p in inputs}
+    if args.json:
+        json.dump(reports, sys.stdout, indent=1)
+        print()
+    else:
+        for p, rep in reports.items():
+            print_report(p, rep)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
