@@ -1,46 +1,92 @@
-"""Decode-kernel throughput (compiled oracle path on CPU; Pallas on TPU) and
-codec rate table -- the substrate for the paper's decompression-overhead
-discussion (§VI / Discussion)."""
+"""Codec-kernel throughput (compiled oracle path on CPU; Pallas on TPU) and
+codec rate table -- the substrate for the paper's compression-overhead
+discussion (§VI / Discussion).
+
+Rows cover both directions of the block codec: fixed-rate decode (the
+training hot path), fixed-rate encode, and the fixed-accuracy encode that
+Algorithm 1 and datagen encode-on-device drive (per-block plane search
+included).  ``--smoke`` runs a seconds-scale subset and writes
+``BENCH_kernel_throughput.json`` for the CI artifact trail.
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.compression import transform as T
 from repro.kernels import ops
 
 
-def run():
+def _time_us(fn, n=20):
+    jax.block_until_ready(fn())                       # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _codec_rows(side: int, reps: int):
     rng = np.random.default_rng(0)
-    x = rng.standard_normal((512, 512)).astype(np.float32)
+    x = rng.standard_normal((side, side)).astype(np.float32)
     xb = T.blockify(T.pad_to_blocks(jnp.asarray(x)))
+    raw_mb = x.nbytes / 1e6
     rows = []
     for bits in (4, 8, 16):
         payload, emax = ops.zfp_encode_blocks(xb, bits)
-        out = ops.zfp_decode_blocks_fast(payload, emax, bits)   # compile
-        out.block_until_ready()
-        n = 20
-        t0 = time.time()
-        for _ in range(n):
-            ops.zfp_decode_blocks_fast(payload, emax, bits).block_until_ready()
-        dt = (time.time() - t0) / n
-        raw_mb = x.nbytes / 1e6
-        rows.append((f"kernel/zfp_decode_b{bits}", dt * 1e6,
-                     f"raw_equiv_MBps={raw_mb / dt:.0f} "
+        us = _time_us(lambda: ops.zfp_decode_blocks_fast(payload, emax, bits),
+                      reps)
+        rows.append((f"kernel/zfp_decode_b{bits}", us,
+                     f"raw_equiv_MBps={raw_mb / (us / 1e6):.0f} "
                      f"compressed_ratio={32 / bits:.1f}x"))
+        us = _time_us(lambda: ops.zfp_encode_blocks_fast(xb, bits), reps)
+        rows.append((f"kernel/zfp_encode_b{bits}", us,
+                     f"raw_equiv_MBps={raw_mb / (us / 1e6):.0f} "
+                     f"compressed_ratio={32 / bits:.1f}x"))
+    for tol in (1e-3, 1e-1):
+        tols = jnp.full((xb.shape[0],), tol, jnp.float32)
+        us = _time_us(lambda: ops.zfp_encode_blocks_fa_fast(xb, tols), reps)
+        _, _, npl = ops.zfp_encode_blocks_fa_fast(xb, tols)
+        rows.append((f"kernel/zfp_encode_fa_tol{tol:g}", us,
+                     f"raw_equiv_MBps={raw_mb / (us / 1e6):.0f} "
+                     f"mean_planes={float(jnp.mean(npl)):.1f}"))
+    return rows
+
+
+def run():
+    rows = _codec_rows(side=512, reps=20)
     # flash attention kernel one timing point (interpret mode: correctness
     # path only -- wall time not meaningful on CPU, recorded for completeness)
+    rng = np.random.default_rng(1)
     q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)).astype(np.float32))
     k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)).astype(np.float32))
-    t0 = time.time()
+    t0 = time.perf_counter()
     ops.flash_attention(q, k, k).block_until_ready()
-    rows.append(("kernel/flash_attention_interpret", (time.time() - t0) * 1e6,
+    rows.append(("kernel/flash_attention_interpret",
+                 (time.perf_counter() - t0) * 1e6,
                  "correctness-path (CPU interpret); perf target is TPU"))
     return rows
 
 
+def run_smoke():
+    """Seconds-scale CI lane: smaller field, fewer reps, codec rows only."""
+    return _codec_rows(side=128, reps=5)
+
+
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale codec rows only; writes "
+                         "BENCH_kernel_throughput.json")
+    args = ap.parse_args()
+    t_start = time.time()
+    rows = run_smoke() if args.smoke else run()
+    for r in rows:
         print(",".join(map(str, r)))
+    if args.smoke:
+        from benchmarks.run import env_provenance, write_bench_json
+        write_bench_json("benchmarks.kernel_throughput", rows,
+                         time.time() - t_start, "ok", env=env_provenance())

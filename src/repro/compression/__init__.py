@@ -10,6 +10,7 @@ Public API:
 from repro.compression.transform import Q_FIXED_POINT, TOTAL_PLANES
 from repro.compression.zfp import (
     CompressedField,
+    FAEncodeState,
     compressed_nbytes,
     compressed_nbytes_batch,
     compression_ratio,
@@ -20,6 +21,10 @@ from repro.compression.zfp import (
     encode_fixed_accuracy_batch,
     encode_fixed_rate,
     encode_fixed_rate_batch,
+    fa_plane_counts,
+    fa_precompute_batch,
+    fa_stats_batch,
+    trim_to_nplanes,
 )
 from repro.compression.transform import blockify, deblockify
 from repro.compression.api import (
@@ -49,6 +54,7 @@ __all__ = [
     "BACKENDS",
     "Codec",
     "CompressedField",
+    "FAEncodeState",
     "FixedAccuracyCodec",
     "FixedRateCodec",
     "LeafSpec",
@@ -76,9 +82,13 @@ __all__ = [
     "encode_fixed_rate",
     "encode_fixed_rate_batch",
     "encode_tree",
+    "fa_plane_counts",
+    "fa_precompute_batch",
+    "fa_stats_batch",
     "get_codec",
     "leaf_2d_shape",
     "register_codec",
     "tree_leaf_keys",
     "tree_nbytes",
+    "trim_to_nplanes",
 ]

@@ -35,7 +35,8 @@ import numpy as np
 from repro.compression import transform as T
 from repro.compression.zfp import (
     CompressedField, compressed_nbytes_batch, decode_batch as _decode_batch_jnp,
-    encode_fixed_accuracy_batch, encode_fixed_rate_batch,
+    encode_fixed_accuracy_batch, encode_fixed_rate_batch, fa_precompute_batch,
+    fa_stats_batch, trim_to_nplanes,
 )
 
 BACKENDS = ("jnp", "pallas")
@@ -108,13 +109,14 @@ def _pad4(shape2d) -> Tuple[int, ...]:
 
 
 def _cf_to_arrays(cf: CompressedField) -> Dict[str, np.ndarray]:
-    """Batched CompressedField -> named plain arrays, payload truncated to the
-    width its kept planes actually need (dropped words are zero by
-    construction; both decode backends accept any narrower static width)."""
-    nplanes = np.asarray(cf.nplanes)
-    w = max(int(np.ceil(int(nplanes.max(initial=0)) / 2)), 1)
-    return {"payload": np.asarray(cf.payload)[..., :w],
-            "emax": np.asarray(cf.emax), "nplanes": nplanes}
+    """Batched CompressedField -> named plain arrays, payload trimmed to the
+    width its kept planes actually need (``trim_to_nplanes``; dropped words
+    are zero by construction and both decode backends accept any narrower
+    static width)."""
+    cf = trim_to_nplanes(cf)
+    return {"payload": np.asarray(cf.payload),
+            "emax": np.asarray(cf.emax),
+            "nplanes": np.asarray(cf.nplanes)}
 
 
 def _cf_from_arrays(arrays: Mapping[str, Any], shape2d) -> CompressedField:
@@ -145,8 +147,9 @@ class FixedAccuracyCodec:
                 raise ValueError("fixed_accuracy encode needs per-sample "
                                  "tolerances or a codec-level default")
             tolerances = jnp.full((xs.shape[0],), self.tolerance, jnp.float32)
-        return encode_fixed_accuracy_batch(xs, jnp.asarray(tolerances,
-                                                           jnp.float32))
+        return encode_fixed_accuracy_batch(
+            xs, jnp.asarray(tolerances, jnp.float32),
+            use_pallas=self.backend == "pallas")
 
     def decode_batch(self, cf: CompressedField) -> jnp.ndarray:
         if self.backend == "pallas":
@@ -154,7 +157,15 @@ class FixedAccuracyCodec:
         return _decode_batch_jnp(cf)
 
     def nbytes(self, cf: CompressedField) -> jnp.ndarray:
-        return compressed_nbytes_batch(cf)
+        return compressed_nbytes_batch(cf, mode="fixed_accuracy")
+
+    # stats-only roundtrip for Algorithm 1's search body: precompute the
+    # tolerance-independent encode state once, then evaluate (L1, nbytes)
+    # per candidate tolerance with no plane packing/unpacking (pure jnp on
+    # both backends — the reductions dominate and XLA fuses them; the Pallas
+    # encode kernel packs only the final accepted tolerance)
+    precompute = staticmethod(fa_precompute_batch)
+    stats = staticmethod(fa_stats_batch)
 
     field_to_arrays = staticmethod(_cf_to_arrays)
     field_from_arrays = staticmethod(_cf_from_arrays)
@@ -181,7 +192,7 @@ class FixedRateCodec:
         return _decode_batch_jnp(cf)
 
     def nbytes(self, cf: CompressedField) -> jnp.ndarray:
-        return compressed_nbytes_batch(cf)
+        return compressed_nbytes_batch(cf, mode="fixed_rate")
 
     field_to_arrays = staticmethod(_cf_to_arrays)
     field_from_arrays = staticmethod(_cf_from_arrays)
@@ -297,7 +308,7 @@ class ResidualCorrectedCodec:
         return _apply_corrector(dec, rcf.weights, rcf.tols)
 
     def nbytes(self, rcf: ResidualCorrectedField) -> jnp.ndarray:
-        return (compressed_nbytes_batch(rcf.base)
+        return (compressed_nbytes_batch(rcf.base, mode="fixed_accuracy")
                 + 4 * (rcf.weights.shape[-1] + 1))
 
     def field_to_arrays(self, rcf: ResidualCorrectedField) -> Dict[str, np.ndarray]:
@@ -367,8 +378,9 @@ def codec_from_plan(codec_plan) -> Codec:
     """Codec for a datagen ``CodecPlan``-shaped object (duck-typed: ``mode``
     plus the mode's parameters), preserving the plan's backend choice."""
     if codec_plan.mode == "fixed_accuracy":
+        backend = "pallas" if getattr(codec_plan, "use_pallas", False) else "jnp"
         return get_codec("fixed_accuracy", tolerance=codec_plan.tolerance,
-                         backend="jnp")
+                         backend=backend)
     if codec_plan.mode == "fixed_rate":
         backend = "pallas" if getattr(codec_plan, "use_pallas", False) else "jnp"
         return get_codec("fixed_rate", bits_per_value=codec_plan.bits_per_value,

@@ -15,6 +15,7 @@ VMEM tiles).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 # Fixed-point scale: |x| / 2^emax < 1 maps to |i| <= 2^Q.  The 2D forward
@@ -188,16 +189,45 @@ def block_emax(blocks_f: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(maxabs >= 2.0 ** -120, e.astype(jnp.int32), jnp.int32(0))
 
 
+def pow2_factors(e: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split 2^e (int32 e) into two exact f32 power-of-two factors.
+
+    XLA's ``exp2`` is a polynomial approximation and lands ~1 ulp off a true
+    power of two at most integer arguments.  That inexactness makes every
+    downstream multiply inexact, so results depend on whether the compiler
+    contracts mul+sub into an FMA -- i.e. on fusion decisions that differ
+    between graphs.  Building the scale in the exponent field instead makes
+    ``x * 2^e`` exact, hence bit-identical across jit graphs, Pallas
+    interpret mode, and compiled TPU kernels.
+
+    The exponent is split into halves so each factor stays in the normal
+    f32 range (the codec's exponents span [-147, 147], past the single-
+    factor limit of +-126/127).
+    """
+    e = e.astype(jnp.int32)
+    e1 = e >> 1                      # floor(e/2); e1, e-e1 in [-74, 74]
+    f1 = jax.lax.bitcast_convert_type((e1 + 127) << 23, jnp.float32)
+    f2 = jax.lax.bitcast_convert_type((e - e1 + 127) << 23, jnp.float32)
+    return f1, f2
+
+
+def scale_by_pow2(x: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """``x * 2^e`` via two exact power-of-two multiplies (see pow2_factors)."""
+    f1, f2 = pow2_factors(e)
+    return (x * f1) * f2
+
+
 def quantize_blocks(blocks_f: jnp.ndarray, emax: jnp.ndarray) -> jnp.ndarray:
     """float (nb,16) -> fixed-point int32 with per-block scale 2^(Q-emax)."""
-    scale = jnp.exp2((Q_FIXED_POINT - emax)[:, None].astype(blocks_f.dtype))
-    return jnp.round(blocks_f * scale).astype(jnp.int32)
+    return jnp.round(
+        scale_by_pow2(blocks_f, (Q_FIXED_POINT - emax)[:, None])
+    ).astype(jnp.int32)
 
 
 def dequantize_blocks(blocks_i: jnp.ndarray, emax: jnp.ndarray,
                       dtype=jnp.float32) -> jnp.ndarray:
-    scale = jnp.exp2((emax - Q_FIXED_POINT)[:, None].astype(dtype))
-    return blocks_i.astype(dtype) * scale
+    return scale_by_pow2(blocks_i.astype(dtype),
+                         (emax - Q_FIXED_POINT)[:, None])
 
 
 def truncate_planes(u: jnp.ndarray, nplanes: jnp.ndarray) -> jnp.ndarray:

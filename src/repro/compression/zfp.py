@@ -18,6 +18,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.compression import transform as T
 
@@ -173,8 +174,9 @@ def encode_fixed_accuracy(x: jnp.ndarray, tol: float) -> CompressedField:
     return CompressedField(payload, emax, nplanes, shape, xp.shape)
 
 
-@jax.jit
-def encode_fixed_accuracy_batch(xs: jnp.ndarray, tols: jnp.ndarray) -> CompressedField:
+@partial(jax.jit, static_argnames=("use_pallas",))
+def encode_fixed_accuracy_batch(xs: jnp.ndarray, tols: jnp.ndarray,
+                                use_pallas: bool = False) -> CompressedField:
     """Batched error-bounded encode: one compiled call for a whole stack.
 
     xs   : (N, ...) float array, compression over the trailing two dims
@@ -185,9 +187,28 @@ def encode_fixed_accuracy_batch(xs: jnp.ndarray, tols: jnp.ndarray) -> Compresse
     ``padded_shape`` describe a single sample.  Per-sample results are
     bit-identical to :func:`encode_fixed_accuracy` — the vmapped while_loop
     runs the same correction arithmetic under a per-sample active mask.
+
+    ``use_pallas=True`` routes the whole per-block pipeline (quantize →
+    lift → negabinary → plane guess → bound-verification correction →
+    variable-plane pack) through the Pallas fixed-accuracy encode kernel
+    (``kernels/zfp_codec.py``; compiled-jnp oracle off-TPU): all N samples'
+    blocks are flattened into one (N*nb, 16) grid.  Both paths emit
+    bit-identical (payload, emax, nplanes) — the static in-VMEM correction
+    loop is iteration-for-iteration the same arithmetic as the while_loop
+    above (asserted in tests/test_compression.py and tests/test_kernels.py).
     """
     tols = jnp.asarray(tols, jnp.float32)
-    return jax.vmap(encode_fixed_accuracy)(xs.astype(jnp.float32), tols)
+    if not use_pallas:
+        return jax.vmap(encode_fixed_accuracy)(xs.astype(jnp.float32), tols)
+    from repro.kernels import ops                    # lazy: ops imports zfp
+    n = xs.shape[0]
+    xp = T.pad_to_blocks(xs.astype(jnp.float32))
+    blocks = T.blockify(xp)                          # (N * nb, 16)
+    nb = blocks.shape[0] // n
+    payload, emax, nplanes = ops.zfp_encode_blocks_fa_fast(
+        blocks, jnp.repeat(tols, nb))
+    return CompressedField(payload.reshape(n, nb, -1), emax.reshape(n, nb),
+                           nplanes.reshape(n, nb), xs.shape[1:], xp.shape[1:])
 
 
 @jax.jit
@@ -210,30 +231,59 @@ def decode(cf: CompressedField) -> jnp.ndarray:
 # sizes
 # ---------------------------------------------------------------------------
 
-def compressed_nbytes(cf: CompressedField) -> jnp.ndarray:
+def _header_bytes_per_block(mode: str) -> int:
+    """Per-block stream header: 1 byte emax always; fixed-accuracy adds a
+    1-byte plane count (the decoder needs per-block counts to mask planes).
+
+    ``mode`` is explicit, never inferred from the data: a fixed-accuracy
+    stream whose plane counts *happen* to be uniform still ships per-block
+    counts — the decoder cannot know they are uniform without reading them.
+    """
+    if mode == "fixed_accuracy":
+        return 2
+    if mode == "fixed_rate":
+        return 1
+    raise ValueError(f"unknown codec mode {mode!r}")
+
+
+def compressed_nbytes(cf: CompressedField,
+                      mode: str = "fixed_accuracy") -> jnp.ndarray:
     """Logical compressed size in bytes (two-level packed layout on disk).
 
-    1 byte emax + 1 byte plane count per block, + 2 bytes per kept plane
-    (16 lanes).  Fixed-rate streams skip the plane-count byte.
+    ``mode`` selects the header billing (see :func:`_header_bytes_per_block`);
+    payload cost is 2 bytes per kept plane (16 lanes) either way.
     """
     nb = cf.nplanes.shape[0]
-    uniform = jnp.all(cf.nplanes == cf.nplanes[0])
-    header = jnp.where(uniform, 1, 2) * nb
-    return header + 2 * jnp.sum(cf.nplanes)
+    return _header_bytes_per_block(mode) * nb + 2 * jnp.sum(cf.nplanes)
 
 
-def compressed_nbytes_batch(cf: CompressedField) -> jnp.ndarray:
+def compressed_nbytes_batch(cf: CompressedField,
+                            mode: str = "fixed_accuracy") -> jnp.ndarray:
     """Per-sample logical bytes for a batched CompressedField: (N,) int."""
     nb = cf.nplanes.shape[-1]
-    uniform = jnp.all(cf.nplanes == cf.nplanes[..., :1], axis=-1)
-    header = jnp.where(uniform, 1, 2) * nb
-    return header + 2 * jnp.sum(cf.nplanes, axis=-1)
+    return (_header_bytes_per_block(mode) * nb
+            + 2 * jnp.sum(cf.nplanes, axis=-1))
 
 
-def compression_ratio(cf: CompressedField) -> jnp.ndarray:
-    import numpy as np
+def compression_ratio(cf: CompressedField,
+                      mode: str = "fixed_accuracy") -> jnp.ndarray:
     raw = int(np.prod(cf.shape)) * 4
-    return raw / compressed_nbytes(cf)
+    return raw / compressed_nbytes(cf, mode)
+
+
+def trim_to_nplanes(cf: CompressedField) -> CompressedField:
+    """Drop payload words beyond ``ceil(max(nplanes) / 2)`` (host-side).
+
+    Words past a block's kept planes are zero by construction and both
+    decode backends accept any width covering the deepest kept plane, so
+    trimming is bit-exact while cutting device-resident HBM bytes and the
+    decode kernel's static word-loop trips.  Concretizes ``nplanes`` (not
+    jit-traceable) — call at store build/finalize time.
+    """
+    npl = np.asarray(cf.nplanes)
+    w = max(int(np.ceil(int(npl.max(initial=0)) / 2)), 1)
+    return CompressedField(cf.payload[..., :w], cf.emax, cf.nplanes,
+                           cf.shape, cf.padded_shape)
 
 
 def _crop(xp: jnp.ndarray, shape) -> jnp.ndarray:
@@ -241,3 +291,104 @@ def _crop(xp: jnp.ndarray, shape) -> jnp.ndarray:
         return xp
     slices = tuple(slice(0, s) for s in shape)
     return xp[slices]
+
+
+# ---------------------------------------------------------------------------
+# stats-only fixed-accuracy roundtrip (Algorithm 1's inner loop)
+# ---------------------------------------------------------------------------
+# The tolerance search (core/tolerance.py) evaluates many tolerances against
+# the SAME sample stack.  Everything tolerance-independent — quantize,
+# forward lift, negabinary — is hoisted into FAEncodeState once; each search
+# iteration then only (a) re-runs the plane-count guess + correction loop
+# and (b) reduces the truncated-coefficient decode to per-sample L1 and
+# logical nbytes.  No pack_planes/unpack_planes ever runs: the search body
+# needs statistics, not a payload, so packing waits for the final accepted
+# tolerance.  The numbers are bit-identical to the packed roundtrip
+# (pack/unpack at full word width is exact), asserted in tests.
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FAEncodeState:
+    """Tolerance-independent encode state for a (N, ...) sample stack.
+
+    xs     : (N, ...) float32 original samples (uncropped, unpadded)
+    blocks : (N*nb, 16) float32 padded block values
+    u_full : (N*nb, 16) int32 full-precision negabinary coefficients
+    emax   : (N*nb,)   int32 per-block shared exponents
+    """
+    xs: jnp.ndarray
+    blocks: jnp.ndarray
+    u_full: jnp.ndarray
+    emax: jnp.ndarray
+    padded_shape: Tuple[int, ...]
+
+    def tree_flatten(self):
+        return ((self.xs, self.blocks, self.u_full, self.emax),
+                (self.padded_shape,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0])
+
+
+@jax.jit
+def fa_precompute_batch(xs: jnp.ndarray) -> FAEncodeState:
+    """Run the tolerance-independent half of the fixed-accuracy encode."""
+    xs = xs.astype(jnp.float32)
+    xp = T.pad_to_blocks(xs)
+    blocks = T.blockify(xp)                          # (N * nb, 16)
+    u_full, emax = _encode_blocks(blocks)
+    return FAEncodeState(xs, blocks, u_full, emax, xp.shape[1:])
+
+
+def fa_plane_counts(state: FAEncodeState, tols: jnp.ndarray) -> jnp.ndarray:
+    """(N,) tolerances -> (N, nb) per-block plane counts.
+
+    Identical guess + bound-verification correction as
+    :func:`encode_fixed_accuracy` (same arithmetic per block; running the
+    flattened batch under one while_loop instead of per-sample loops cannot
+    change the fixpoint — the correction body is a no-op on settled blocks).
+    """
+    n = state.xs.shape[0]
+    nb = state.emax.shape[0] // n
+    tols_b = jnp.repeat(jnp.asarray(tols, jnp.float32), nb)
+    npl = _planes_for_tolerance(state.emax, tols_b)
+    npl = jnp.where(jnp.all(state.u_full == 0, axis=-1), 0, npl)
+
+    def block_err(npl):
+        u = T.truncate_planes(state.u_full, npl)
+        dec = _decode_blocks(u, state.emax)
+        return jnp.max(jnp.abs(dec - state.blocks), axis=-1)
+
+    def cond(s):
+        npl, it = s
+        bad = (block_err(npl) > tols_b) & (npl < T.TOTAL_PLANES)
+        return jnp.any(bad) & (it < MAX_FIX_ITERS)
+
+    def body(s):
+        npl, it = s
+        bad = block_err(npl) > tols_b
+        return jnp.where(bad, jnp.minimum(npl + 2, T.TOTAL_PLANES), npl), it + 1
+
+    npl, _ = jax.lax.while_loop(cond, body, (npl, jnp.int32(0)))
+    return npl.reshape(n, nb)
+
+
+def fa_stats_batch(state: FAEncodeState, tols: jnp.ndarray):
+    """Stats-only roundtrip: per-sample ``(l1, nbytes)`` at tolerances ``tols``.
+
+    Equals ``(mean |decode(encode(xs, tols)) - xs|, nbytes(encode(...)))``
+    bit-for-bit, with no plane packing/unpacking and no re-quantize/lift.
+    """
+    n = state.xs.shape[0]
+    npl = fa_plane_counts(state, tols)               # (N, nb)
+    u = T.truncate_planes(state.u_full, npl.reshape(-1))
+    dec = _decode_blocks(u, state.emax)
+    xd = T.deblockify(dec, (n,) + tuple(state.padded_shape))
+    xd = _crop(xd, state.xs.shape)
+    axes = tuple(range(1, state.xs.ndim))
+    l1 = jnp.mean(jnp.abs(xd - state.xs), axis=axes)
+    nbytes = (_header_bytes_per_block("fixed_accuracy") * npl.shape[1]
+              + 2 * jnp.sum(npl, axis=-1))
+    return l1, nbytes

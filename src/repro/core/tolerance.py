@@ -121,10 +121,11 @@ class BatchToleranceResult:
                 for i in range(len(self))]
 
 
-@partial(jax.jit, static_argnames=("d", "max_iters", "codec"))
+@partial(jax.jit, static_argnames=("d", "max_iters", "codec", "fused"))
 def _search_batch(xs: jnp.ndarray, es: jnp.ndarray,
                   d: int, max_iters: int,
-                  codec: FixedAccuracyCodec = _SEARCH_CODEC):
+                  codec: FixedAccuracyCodec = _SEARCH_CODEC,
+                  fused: bool = True):
     """Doubling/halving searches for all samples in one lax.while_loop.
 
     Per-sample masks replicate the reference control flow: double while the
@@ -133,17 +134,33 @@ def _search_batch(xs: jnp.ndarray, es: jnp.ndarray,
     its search terminates.  Every iteration evaluates the whole stack with
     one batched encode/decode; finished samples are masked out of the state
     updates, so results match find_tolerance exactly.
+
+    ``fused=True`` (default) swaps the loop body's full encode→pack→
+    unpack→decode roundtrip for the stats-only path: quantize / forward
+    lift / negabinary are hoisted out of the while_loop once
+    (``codec.precompute``), and each iteration only re-derives per-block
+    plane counts and the truncated decode (``codec.stats``) — the loop
+    needs nothing but per-sample L1 and byte counts, and pack(MAX_WORDS)
+    →unpack is an exact inverse, so the decision sequence is bit-identical
+    to the unfused baseline (tests assert so).
     """
     n = xs.shape[0]
     sample_size = int(np.prod(xs.shape[1:]))
     axes = tuple(range(1, xs.ndim))
 
-    def evaluate(t):
-        cf = codec.encode_batch(xs, t)
-        xd = codec.decode_batch(cf)
-        l1 = jnp.mean(jnp.abs(xd - xs), axis=axes)
-        ratio = sample_size * 4.0 / codec.nbytes(cf)
-        return l1, ratio
+    if fused:
+        state = codec.precompute(xs)
+
+        def evaluate(t):
+            l1, nbytes = codec.stats(state, t)
+            return l1, sample_size * 4.0 / nbytes
+    else:
+        def evaluate(t):
+            cf = codec.encode_batch(xs, t)
+            xd = codec.decode_batch(cf)
+            l1 = jnp.mean(jnp.abs(xd - xs), axis=axes)
+            ratio = sample_size * 4.0 / codec.nbytes(cf)
+            return l1, ratio
 
     init = {
         "t": (4.0 ** d) * es / C_D[d],
@@ -202,12 +219,17 @@ def _search_batch(xs: jnp.ndarray, es: jnp.ndarray,
 
 def find_tolerance_batch(samples: np.ndarray | Sequence[np.ndarray],
                          model_l1_errors: Sequence[float] | np.ndarray,
-                         d: int = 2, max_iters: int = 8) -> BatchToleranceResult:
+                         d: int = 2, max_iters: int = 8,
+                         codec: FixedAccuracyCodec | None = None,
+                         fused: bool = True) -> BatchToleranceResult:
     """Algorithm 1 for a stack of same-shape samples in one compiled call.
 
     Equivalent to ``[find_tolerance(s, e) for s, e in zip(...)]`` but the
     whole search runs device-side: one jitted lax.while_loop whose body
-    encodes/decodes every still-active sample with the batched codec.
+    evaluates every still-active sample with the batched codec.  ``fused``
+    selects the stats-only loop body (see ``_search_batch``); ``codec``
+    overrides the search codec (e.g. ``backend="pallas"`` on TPU for the
+    unfused roundtrip path).
     """
     xs = jnp.asarray(np.stack([np.asarray(s, np.float32) for s in samples])
                      if not isinstance(samples, (np.ndarray, jnp.ndarray))
@@ -216,7 +238,9 @@ def find_tolerance_batch(samples: np.ndarray | Sequence[np.ndarray],
     assert xs.shape[0] == es.shape[0], "one model error per sample"
     with obs_trace.span("tolerance.search_batch", cat="certify",
                         samples=int(xs.shape[0])) as sp:
-        tol, l1, ratio, iters = _search_batch(xs, es, d, max_iters)
+        tol, l1, ratio, iters = _search_batch(
+            xs, es, d, max_iters,
+            _SEARCH_CODEC if codec is None else codec, fused)
         iters = np.asarray(iters)
         sp.set(max_iterations=int(iters.max(initial=0)))
     return BatchToleranceResult(np.asarray(tol), np.asarray(es),

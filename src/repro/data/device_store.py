@@ -137,11 +137,11 @@ class DeviceResidentCompressedStore:
         arrays may already live on device -- nothing is re-encoded.  Payload
         words beyond each sample's kept planes are dropped to the store-wide
         max width (they are zero by construction)."""
-        from repro.compression import compressed_nbytes_batch
+        from repro.compression import compressed_nbytes_batch, trim_to_nplanes
         if nbytes is None:
-            nbytes = compressed_nbytes_batch(cf)
-        wmax = max(int(np.ceil(int(jnp.max(cf.nplanes)) / 2)), 1)
-        return cls(cf.payload[:, :, :wmax], cf.emax, cf.nplanes, cf.shape,
+            nbytes = compressed_nbytes_batch(cf, mode="fixed_accuracy")
+        cf = trim_to_nplanes(cf)
+        return cls(cf.payload, cf.emax, cf.nplanes, cf.shape,
                    cf.padded_shape, np.asarray(tolerances, np.float32),
                    np.asarray(nbytes, np.int64), shard_size=shard_size)
 

@@ -85,7 +85,8 @@ def pack_sample_records(cf) -> tuple:
     pay = np.asarray(cf.payload)                          # (c, nb, MAXW)
     ema = np.asarray(cf.emax, np.int32)
     npl = np.asarray(cf.nplanes)
-    logical = np.asarray(compressed_nbytes_batch(cf)).astype(np.int64)
+    logical = np.asarray(
+        compressed_nbytes_batch(cf, mode="fixed_accuracy")).astype(np.int64)
     records, widths = [], []
     for j in range(pay.shape[0]):
         w = int(np.ceil(npl[j].max() / 2)) or 1

@@ -6,6 +6,8 @@ used for correctness validation against ref.py).
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -70,6 +72,46 @@ def _ref_decode_fa_jit(payload, emax, nplanes):
 def zfp_encode_blocks(blocks, bits_per_value):
     return zfp_codec.zfp_encode_blocks(blocks, bits_per_value,
                                        interpret=_interpret())
+
+
+def zfp_encode_blocks_fast(blocks, bits_per_value):
+    """Throughput path for the fixed-rate encode: compiled Pallas on TPU,
+    compiled jnp oracle elsewhere (interpret mode is a correctness tool)."""
+    if _interpret():
+        return _ref_encode_jit(blocks, bits_per_value)
+    return zfp_codec.zfp_encode_blocks(blocks, bits_per_value)
+
+
+@partial(jax.jit, static_argnames=("bits_per_value",))
+def _ref_encode_jit(blocks, bits_per_value):
+    from repro.kernels import ref
+    return ref.zfp_encode_blocks_ref(blocks, bits_per_value)
+
+
+def zfp_encode_blocks_fa(blocks, tols):
+    """Fixed-accuracy encode (per-block L-inf tolerances), kernel path."""
+    return zfp_codec.zfp_encode_blocks_fa(blocks, tols,
+                                          interpret=_interpret())
+
+
+def zfp_encode_blocks_fa_fast(blocks, tols):
+    """Throughput path for the fixed-accuracy encode.
+
+    Compiled Pallas on TPU, compiled jnp oracle elsewhere — the dispatch
+    mirror of ``zfp_decode_blocks_fa_fast``.  Bit-identical to the kernel
+    path (tests assert payload/emax/nplanes equality), so the codec seam's
+    ``backend="pallas"`` encode and the datagen encode-on-device path can
+    use it unconditionally.
+    """
+    if _interpret():
+        return _ref_encode_fa_jit(blocks, tols)
+    return zfp_codec.zfp_encode_blocks_fa(blocks, tols)
+
+
+@jax.jit
+def _ref_encode_fa_jit(blocks, tols):
+    from repro.kernels import ref
+    return ref.zfp_encode_blocks_fa_ref(blocks, tols)
 
 
 def decode_field(cf: CompressedField) -> jnp.ndarray:

@@ -40,6 +40,40 @@ def zfp_decode_blocks_ref(payload: jnp.ndarray, emax: jnp.ndarray,
     return T.dequantize_blocks(qi, emax)
 
 
+def zfp_encode_blocks_fa_ref(blocks_f: jnp.ndarray, tols: jnp.ndarray):
+    """Fixed-accuracy encode oracle with per-block L-inf tolerances.
+
+    (nb, 16) f32 blocks, (nb,) f32 tols -> ((nb, MAX_WORDS) int32 payload,
+    (nb,) int32 emax, (nb,) int32 nplanes).  Mirrors
+    ``compression/zfp.py::encode_fixed_accuracy`` block-for-block: plane
+    guess from ``emax - floor(log2(tol)) + GUARD_BITS``, zero-block
+    short-circuit, then the bound-verification correction run a static
+    ``MAX_FIX_ITERS`` times (the while_loop's body is a no-op once a block's
+    realized error is within tolerance, so the unroll reaches the identical
+    fixpoint).
+    """
+    from repro.compression.zfp import GUARD_BITS, MAX_FIX_ITERS
+    emax = T.block_emax(blocks_f)
+    qi = T.quantize_blocks(blocks_f, emax)
+    u_full = T.int2nb(T.fwd_transform_2d(qi))
+    tols = jnp.asarray(tols, jnp.float32)
+    log2tol = jnp.floor(jnp.log2(tols)).astype(jnp.int32)
+    npl = jnp.clip(emax - log2tol + GUARD_BITS, 0,
+                   T.TOTAL_PLANES).astype(jnp.int32)
+    npl = jnp.where(jnp.all(u_full == 0, axis=-1), 0, npl)
+
+    def block_err(npl):
+        u = T.truncate_planes(u_full, npl)
+        dec = T.dequantize_blocks(T.inv_transform_2d(T.nb2int(u)), emax)
+        return jnp.max(jnp.abs(dec - blocks_f), axis=-1)
+
+    for _ in range(MAX_FIX_ITERS):
+        bad = block_err(npl) > tols
+        npl = jnp.where(bad, jnp.minimum(npl + 2, T.TOTAL_PLANES), npl)
+    payload = T.pack_planes(T.truncate_planes(u_full, npl), T.MAX_WORDS)
+    return payload, emax, npl
+
+
 def zfp_decode_blocks_fa_ref(payload: jnp.ndarray, emax: jnp.ndarray,
                              nplanes: jnp.ndarray) -> jnp.ndarray:
     """Fixed-accuracy oracle: per-block plane counts mask the unpacked stream.

@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for the fixed-rate ZFP block codec.
+"""Pallas TPU kernels for the ZFP block codec (fixed-rate + fixed-accuracy).
 
 Layout: blocks are (nb, 16) lanes (one 4x4 spatial block per row), payload is
 (nb, W) int32 with two 16-lane bit planes per word, MSB plane first.  The
@@ -23,7 +23,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.compression.transform import Q_FIXED_POINT, TOTAL_PLANES
+from repro.compression.transform import (
+    MAX_WORDS,
+    Q_FIXED_POINT,
+    TOTAL_PLANES,
+    scale_by_pow2,
+)
+from repro.compression.zfp import GUARD_BITS, MAX_FIX_ITERS
 
 BLOCK_TILE = 256          # blocks per VMEM tile: 256*16*4B = 16 KiB out tile
 _NEG = -1431655766  # 0xAAAAAAAA as int32 (python int: kernels may not capture jax arrays)
@@ -104,8 +110,7 @@ def _decode_kernel(payload_ref, emax_ref, out_ref, *, num_words):
     neg = jnp.int32(_NEG)
     coef = (u ^ neg) - neg                            # negabinary -> int
     qi = _inv_transform_tile(coef)
-    scale = jnp.exp2((emax - Q_FIXED_POINT).astype(jnp.float32))
-    out_ref[...] = qi.astype(jnp.float32) * scale
+    out_ref[...] = scale_by_pow2(qi.astype(jnp.float32), emax - Q_FIXED_POINT)
 
 
 @functools.partial(jax.jit, static_argnames=("bits_per_value", "interpret"))
@@ -160,8 +165,7 @@ def _decode_fa_kernel(payload_ref, emax_ref, nplanes_ref, out_ref, *,
     neg = jnp.int32(_NEG)
     coef = (u ^ neg) - neg                            # negabinary -> int
     qi = _inv_transform_tile(coef)
-    scale = jnp.exp2((emax - Q_FIXED_POINT).astype(jnp.float32))
-    out_ref[...] = qi.astype(jnp.float32) * scale
+    out_ref[...] = scale_by_pow2(qi.astype(jnp.float32), emax - Q_FIXED_POINT)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -209,8 +213,7 @@ def _encode_kernel(blocks_ref, payload_ref, emax_ref, *, num_words, bits):
     mbits = jax.lax.bitcast_convert_type(maxabs, jnp.int32)
     e = ((mbits >> 23) & 0xFF) - 126
     emax = jnp.where(maxabs >= 2.0 ** -120, e, 0).astype(jnp.int32)
-    scale = jnp.exp2((Q_FIXED_POINT - emax).astype(jnp.float32))
-    qi = jnp.round(x * scale).astype(jnp.int32)
+    qi = jnp.round(scale_by_pow2(x, Q_FIXED_POINT - emax)).astype(jnp.int32)
     coef = _fwd_transform_tile(qi)
     neg = jnp.int32(_NEG)
     u = (coef + neg) ^ neg                            # int -> negabinary
@@ -227,6 +230,107 @@ def _encode_kernel(blocks_ref, payload_ref, emax_ref, *, num_words, bits):
             plane_lo = jnp.zeros_like(plane_hi)
         payload_ref[:, k] = plane_hi | (plane_lo << 16)
     emax_ref[...] = emax
+
+
+def _encode_fa_kernel(blocks_ref, tol_ref, log2tol_ref, payload_ref,
+                      emax_ref, nplanes_ref):
+    """Fixed-accuracy encode tile: the full error-bounded pipeline in VMEM.
+
+    Same quantize → forward lift → negabinary front end as
+    ``_encode_kernel``, then the per-block plane-count guess
+    (``_planes_for_tolerance``: ``emax - floor(log2(tol)) + GUARD_BITS``,
+    with ``floor(log2(tol))`` precomputed OUTSIDE the kernel so both
+    backends share one fp log2 evaluation) and the bound-verification
+    correction as a static ``MAX_FIX_ITERS``-deep in-register loop — the
+    jnp encoder's while_loop runs the identical body at most that many
+    times and the body is a no-op on settled blocks, so unrolling is
+    bit-exact.  The final variable-plane pack masks via each block's
+    ``nplanes`` and always emits the full MAX_WORDS width (callers trim).
+    """
+    x = blocks_ref[...]                               # (BT, 16) f32
+    tol = tol_ref[...]                                # (BT, 1) f32
+    log2tol = log2tol_ref[...]                        # (BT, 1) i32
+    maxabs = jnp.max(jnp.abs(x), axis=-1, keepdims=True)   # (BT, 1)
+    # frexp exponent via bit twiddling: x = m 2^e, m in [0.5, 1)
+    mbits = jax.lax.bitcast_convert_type(maxabs, jnp.int32)
+    e = ((mbits >> 23) & 0xFF) - 126
+    emax = jnp.where(maxabs >= 2.0 ** -120, e, 0).astype(jnp.int32)
+    qi = jnp.round(scale_by_pow2(x, Q_FIXED_POINT - emax)).astype(jnp.int32)
+    coef = _fwd_transform_tile(qi)
+    neg = jnp.int32(_NEG)
+    u_full = (coef + neg) ^ neg                       # int -> negabinary
+
+    npl = jnp.clip(emax - log2tol + GUARD_BITS, 0, TOTAL_PLANES)
+    npl = jnp.where(jnp.all(u_full == 0, axis=-1, keepdims=True), 0, npl)
+    for _ in range(MAX_FIX_ITERS):                    # static unroll
+        shift = jnp.clip(TOTAL_PLANES - npl, 0, 31)
+        u = u_full & (jnp.int32(-1) << shift)
+        deci = _inv_transform_tile((u ^ neg) - neg).astype(jnp.float32)
+        dec = scale_by_pow2(deci, emax - Q_FIXED_POINT)
+        err = jnp.max(jnp.abs(dec - x), axis=-1, keepdims=True)
+        bad = err > tol
+        npl = jnp.where(bad, jnp.minimum(npl + 2, TOTAL_PLANES), npl)
+
+    shift = jnp.clip(TOTAL_PLANES - npl, 0, 31)
+    u = u_full & (jnp.int32(-1) << shift)             # truncate kept planes
+    lanes = _lanes16()
+    for k in range(MAX_WORDS):
+        p_hi = TOTAL_PLANES - 1 - 2 * k
+        p_lo = TOTAL_PLANES - 2 - 2 * k
+        plane_hi = jnp.sum(((u >> p_hi) & 1) << lanes, axis=-1, dtype=jnp.int32)
+        if p_lo >= 0:
+            plane_lo = jnp.sum(((u >> p_lo) & 1) << lanes, axis=-1, dtype=jnp.int32)
+        else:
+            plane_lo = jnp.zeros_like(plane_hi)
+        payload_ref[:, k] = plane_hi | (plane_lo << 16)
+    emax_ref[...] = emax
+    nplanes_ref[...] = npl
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def zfp_encode_blocks_fa(blocks: jnp.ndarray, tols: jnp.ndarray,
+                         interpret: bool = False):
+    """Pallas fixed-accuracy encode with per-block L-inf tolerances.
+
+    ((nb, 16) f32, (nb,) f32) -> ((nb, MAX_WORDS) int32 payload,
+    (nb,) int32 emax, (nb,) int32 nplanes), bit-identical per block to
+    ``compression/zfp.py::encode_fixed_accuracy`` (batch callers repeat a
+    sample's tolerance across its blocks; the per-block arithmetic never
+    couples blocks, so flattening sample stacks is exact).
+    """
+    nb = blocks.shape[0]
+    tols = jnp.asarray(tols, jnp.float32)
+    # one fp log2 evaluation shared with the jnp encoder's formula — inside
+    # the kernel a different log2 lowering could flip the floor at exact
+    # powers of two
+    log2tols = jnp.floor(jnp.log2(tols)).astype(jnp.int32)
+    pad = (-nb) % BLOCK_TILE
+    if pad:
+        blocks = jnp.pad(blocks, ((0, pad), (0, 0)))
+        tols = jnp.pad(tols, ((0, pad),), constant_values=1.0)
+        log2tols = jnp.pad(log2tols, ((0, pad),))
+    nbp = blocks.shape[0]
+    payload, emax, nplanes = pl.pallas_call(
+        _encode_fa_kernel,
+        grid=(nbp // BLOCK_TILE,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_TILE, 16), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_TILE, MAX_WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbp, MAX_WORDS), jnp.int32),
+            jax.ShapeDtypeStruct((nbp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nbp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(blocks, tols[:, None], log2tols[:, None])
+    return payload[:nb], emax[:nb, 0], nplanes[:nb, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("bits_per_value", "interpret"))

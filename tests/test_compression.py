@@ -16,7 +16,8 @@ except ImportError:
 
 from repro.compression import (
     compressed_nbytes, compression_ratio, decode, decode_fixed_rate,
-    encode_fixed_accuracy, encode_fixed_rate, blockify, deblockify,
+    encode_fixed_accuracy, encode_fixed_accuracy_batch, encode_fixed_rate,
+    blockify, deblockify,
 )
 from repro.compression import transform as T
 
@@ -168,3 +169,75 @@ def test_fixed_rate_batch_decodes_like_per_sample(rng):
     for j in range(4):
         want = np.asarray(decode_fixed_rate(encode_fixed_rate(xs[j], 11)))
         assert np.array_equal(got[j], want)
+
+
+@pytest.mark.parametrize("shape", [(5, 3, 13, 19), (4, 16, 16)])
+def test_fixed_accuracy_batch_pallas_oracle_parity(rng, shape):
+    """backend="pallas" fixed-accuracy encode emits bit-identical streams.
+
+    This is the contract that lets ``CodecPlan.use_pallas`` stay out of the
+    datagen plan hash: flipping the backend cannot change produced bytes.
+    """
+    from repro.compression import encode_fixed_accuracy, get_codec
+    xs = jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 7.0)
+    tols = jnp.asarray(10.0 ** rng.uniform(-4, -1, shape[0]), jnp.float32)
+    cf_j = get_codec("fixed_accuracy", backend="jnp").encode_batch(xs, tols)
+    cf_p = get_codec("fixed_accuracy", backend="pallas").encode_batch(xs, tols)
+    for field in ("payload", "emax", "nplanes"):
+        assert np.array_equal(np.asarray(getattr(cf_j, field)),
+                              np.asarray(getattr(cf_p, field))), field
+    for i in range(shape[0]):                   # flattening samples is exact
+        cf1 = encode_fixed_accuracy(xs[i], tols[i])
+        assert np.array_equal(np.asarray(cf1.payload),
+                              np.asarray(cf_p.payload[i]))
+        assert np.array_equal(np.asarray(cf1.nplanes),
+                              np.asarray(cf_p.nplanes[i]))
+
+
+def test_nbytes_header_billing_is_mode_explicit(rng):
+    """Header billing follows the declared mode, never the data.
+
+    A fixed-accuracy stream whose plane counts happen to be uniform must
+    still be billed the 2-byte fixed-accuracy header (the decoder ships
+    per-block counts regardless); the old data-dependent detection
+    (``all(nplanes == nplanes[0])``) silently collapsed such batches to
+    fixed-rate billing.
+    """
+    from repro.compression import compressed_nbytes, compressed_nbytes_batch
+    block = rng.standard_normal((4, 4)).astype(np.float32)
+    xs = jnp.asarray(np.tile(block, (3, 2, 2)))          # identical blocks
+    cf = encode_fixed_accuracy_batch(xs, jnp.full((3,), 1e-3, jnp.float32))
+    npl = np.asarray(cf.nplanes)
+    assert (npl == npl.flat[0]).all()                    # uniform on purpose
+    nb = npl.shape[1]
+    expect = 2 * nb + 2 * npl.sum(axis=1)
+    got = np.asarray(compressed_nbytes_batch(cf, mode="fixed_accuracy"))
+    assert np.array_equal(got, expect)
+    got_fr = np.asarray(compressed_nbytes_batch(cf, mode="fixed_rate"))
+    assert np.array_equal(got_fr, expect - nb)           # 1-byte headers
+    with pytest.raises(ValueError):
+        compressed_nbytes_batch(cf, mode="adaptive")
+    with pytest.raises(ValueError):
+        compressed_nbytes(cf, mode="adaptive")
+
+
+def test_trim_to_nplanes_bit_identity(rng):
+    """Trimming payload words past ceil(max(nplanes)/2) decodes identically."""
+    from repro.compression import decode_batch, trim_to_nplanes
+    from repro.kernels import ops
+    xs = jnp.asarray(rng.standard_normal((4, 12, 20)).astype(np.float32))
+    cf = encode_fixed_accuracy_batch(xs, jnp.full((4,), 0.05, jnp.float32))
+    cft = trim_to_nplanes(cf)
+    w = int(np.ceil(np.asarray(cf.nplanes).max() / 2))
+    assert cft.payload.shape[-1] == max(w, 1) < cf.payload.shape[-1]
+    assert np.array_equal(np.asarray(decode_batch(cft)),
+                          np.asarray(decode_batch(cf)))
+    # kernel decode at the trimmed width matches the untrimmed stream too
+    n, nb = cf.nplanes.shape
+    full = ops.zfp_decode_blocks_fa(cf.payload.reshape(n * nb, -1),
+                                    cf.emax.reshape(-1),
+                                    cf.nplanes.reshape(-1))
+    trimmed = ops.zfp_decode_blocks_fa(cft.payload.reshape(n * nb, -1),
+                                       cft.emax.reshape(-1),
+                                       cft.nplanes.reshape(-1))
+    assert np.array_equal(np.asarray(full), np.asarray(trimmed))

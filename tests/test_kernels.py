@@ -170,3 +170,59 @@ def test_flash_attention_small_blocks(rng):
     o_k = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
                           interpret=True)
     np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fixed-accuracy encode kernel: bit-exact vs oracle (Algorithm 1's hot path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tol", [1e-4, 1e-2, 0.25, 0.5])
+@pytest.mark.parametrize("n_blocks", [1, 7, 256, 300])
+def test_zfp_encode_fa_matches_ref(rng, n_blocks, tol):
+    blocks = _blocks_from(rng, n_blocks, "rough")
+    tols = jnp.full((n_blocks,), tol, jnp.float32)
+    p_ref, e_ref, n_ref = ref.zfp_encode_blocks_fa_ref(blocks, tols)
+    p_k, e_k, n_k = ops.zfp_encode_blocks_fa(blocks, tols)
+    assert np.array_equal(np.asarray(p_k), np.asarray(p_ref))
+    assert np.array_equal(np.asarray(e_k), np.asarray(e_ref))
+    assert np.array_equal(np.asarray(n_k), np.asarray(n_ref))
+
+
+def test_zfp_encode_fa_mixed_tolerances(rng):
+    """Per-block tolerances (the batched encode repeats a sample's tolerance
+    across its blocks -- the kernel must honor each row independently)."""
+    blocks = _blocks_from(rng, 192, "rough")
+    tols = jnp.asarray(10.0 ** rng.uniform(-5, 0, 192), jnp.float32)
+    p_ref, e_ref, n_ref = ref.zfp_encode_blocks_fa_ref(blocks, tols)
+    p_k, e_k, n_k = ops.zfp_encode_blocks_fa(blocks, tols)
+    assert np.array_equal(np.asarray(p_k), np.asarray(p_ref))
+    assert np.array_equal(np.asarray(e_k), np.asarray(e_ref))
+    assert np.array_equal(np.asarray(n_k), np.asarray(n_ref))
+
+
+def test_zfp_encode_fa_zero_blocks(rng):
+    """All-zero (and sub-flush-threshold) blocks keep zero planes."""
+    blocks = jnp.zeros((40, 16), jnp.float32)
+    blocks = blocks.at[7].set(1e-40)            # below the 2^-120 flush
+    p, e, n = ops.zfp_encode_blocks_fa(blocks, jnp.full((40,), 1e-3))
+    assert not np.asarray(p).any()
+    assert not np.asarray(e).any()
+    assert not np.asarray(n).any()
+
+
+@pytest.mark.parametrize("tol", [1e-3, 1e-1])
+def test_zfp_encode_fa_roundtrip_honors_bound(rng, tol):
+    """Kernel encode -> kernel decode stays within the L-inf tolerance."""
+    blocks = _blocks_from(rng, 128, "smooth")
+    p, e, n = ops.zfp_encode_blocks_fa(blocks, jnp.full((128,), tol))
+    dec = ops.zfp_decode_blocks_fa(p, e, n)
+    assert float(jnp.max(jnp.abs(dec - blocks))) <= tol
+
+
+def test_zfp_encode_fa_fast_path_identical(rng):
+    """The compiled-oracle throughput path is bit-identical to the kernel."""
+    blocks = _blocks_from(rng, 96, "rough")
+    tols = jnp.asarray(10.0 ** rng.uniform(-4, -1, 96), jnp.float32)
+    for a, b in zip(ops.zfp_encode_blocks_fa(blocks, tols),
+                    ops.zfp_encode_blocks_fa_fast(blocks, tols)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

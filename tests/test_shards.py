@@ -263,3 +263,79 @@ def test_manifest_write_is_atomic_under_crash(field_stack, tolerances,
         atomic_write_json(path, {"format": "new"})
     monkeypatch.setattr(os, "replace", real_replace)
     assert open(path, "rb").read() == before
+
+
+def test_find_tolerance_batch_fused_matches_baseline(field_stack):
+    """The stats-only fused loop body makes bit-identical decisions to the
+    full encode->pack->unpack->decode baseline (pack/unpack is an exact
+    inverse, so skipping it cannot perturb L1 or byte counts)."""
+    errors = [0.02, 0.005, 0.5, 1e-12, 0.0001, 10.0]
+    xs = np.array(field_stack[:len(errors)])
+    xs[2] = 0.0                                          # all-zero sample
+    bf = find_tolerance_batch(xs, errors, fused=True)
+    bb = find_tolerance_batch(xs, errors, fused=False)
+    for field in ("tolerance", "compression_l1", "ratio", "iterations"):
+        assert np.array_equal(getattr(bf, field), getattr(bb, field),
+                              equal_nan=True), field
+
+
+def test_find_tolerance_halving_path(field_stack):
+    """Initial guess overshoots (realized L1 > e) -> halve downward; the
+    result must be the first halved tolerance that meets the bound."""
+    x = field_stack[0]
+    e = 0.003          # t0 = 256e/1.089 realizes L1 well above e: overshoot
+    r = find_tolerance(x, e)
+    t0 = (4.0 ** 2) * e / 1.089
+    assert r.tolerance < t0                              # went down, not up
+    assert r.compression_l1 <= e
+    assert r.iterations > 1
+    # the accepted t is t0 / 2^(iterations - 1): one evaluation per halving
+    assert np.isclose(r.tolerance, t0 / 2.0 ** (r.iterations - 1), rtol=1e-6)
+    br = find_tolerance_batch(x[None], [e])
+    assert np.isclose(br.tolerance[0], r.tolerance, rtol=1e-6)
+    assert int(br.iterations[0]) == r.iterations
+
+
+def test_find_tolerance_no_solution_freezes_last_t(field_stack):
+    """Unreachable bound: 8 halvings all fail; the result reports the last
+    *evaluated* tolerance (t0 / 2^(max_iters-1)), inf L1 and ratio 1."""
+    x = field_stack[1]
+    e = 1e-12
+    r = find_tolerance(x, e, max_iters=8)
+    t0 = (4.0 ** 2) * e / 1.089
+    assert r.compression_l1 == float("inf")
+    assert r.ratio == 1.0
+    assert r.iterations == 8
+    assert np.isclose(r.tolerance, t0 / 2.0 ** 7, rtol=1e-6)
+    br = find_tolerance_batch(x[None], [e], max_iters=8)
+    assert br.compression_l1[0] == np.float32("inf")
+    assert br.ratio[0] == 1.0
+    assert np.isclose(br.tolerance[0], r.tolerance, rtol=1e-6)
+
+
+def test_find_tolerance_zero_sample_saturates(field_stack):
+    """An all-zero sample compresses to headers only: the ratio saturates
+    immediately and the doubling search stops on the saturation rule, not
+    by exhausting max_iters."""
+    x = np.zeros_like(field_stack[0])
+    r = find_tolerance(x, 0.01)
+    assert r.compression_l1 == 0.0
+    assert r.iterations < 8                              # stopped early
+    br = find_tolerance_batch(x[None], [0.01])
+    assert np.isclose(br.tolerance[0], r.tolerance, rtol=1e-6)
+    assert int(br.iterations[0]) == r.iterations
+    assert np.isclose(br.ratio[0], r.ratio, rtol=1e-5)
+
+
+def test_find_tolerance_batch_freeze_t_is_per_sample(field_stack):
+    """Samples terminating at different iterations keep their own final
+    tolerances -- the masked while_loop must not advance a finished
+    sample's t while others continue (mixed fast/slow/no-solution stack)."""
+    errors = [10.0, 0.003, 1e-12, 0.02]
+    xs = np.array(field_stack[:len(errors)])
+    xs[0] = 0.0                       # terminates in 2 iters (saturation)
+    br = find_tolerance_batch(xs, errors)
+    for i, e in enumerate(errors):
+        r = find_tolerance(xs[i], e)
+        assert np.isclose(br.tolerance[i], r.tolerance, rtol=1e-6), i
+        assert int(br.iterations[i]) == r.iterations, i
